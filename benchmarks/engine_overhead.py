@@ -1,0 +1,93 @@
+"""Real-execution microbenchmarks on the replica engine (paper §5.1/§6.5
+flavour, measured on actual JAX compute):
+
+  * context-switch cost — wall time to pause a long prefill and start a
+    short batch vs the uninterrupted run (the paper's preemption overhead);
+  * suspension-state size — intermediate bytes vs completed-layer KV bytes
+    (the paper's "<5% of total KV" claim, §5.1);
+  * KV migration cost — admitting a finished prefill into another engine's
+    decode slots (§5.2 disaggregation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models import init_params
+from repro.serving.engine import ReplicaEngine
+
+
+def run(seq_long: int = 96, layers: int = 8) -> Dict:
+    cfg = dataclasses.replace(
+        reduced_config(get_config("mistral_7b"), layers=layers),
+        dtype="float32", sliding_window=0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ReplicaEngine(cfg, params, max_len=128, layers_per_quantum=1)
+    dec = ReplicaEngine(cfg, params, max_len=128, layers_per_quantum=1)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, seq_long)),
+                       jnp.int32)
+    short = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 16)), jnp.int32)
+
+    def full_prefill(t):
+        st = eng.start_prefill(0, t)
+        while True:
+            st, done = eng.prefill_quantum(st)
+            if done:
+                return st
+
+    full_prefill(toks)      # warm up jits
+    full_prefill(short)
+
+    t0 = time.perf_counter()
+    st = full_prefill(toks)
+    t_uninterrupted = time.perf_counter() - t0
+
+    # preempted run: pause halfway, serve a short batch, resume
+    t0 = time.perf_counter()
+    st2 = eng.start_prefill(1, toks)
+    for _ in range(layers // 2):
+        st2, _ = eng.prefill_quantum(st2)
+    t_half = time.perf_counter()
+    sh = full_prefill(short)                  # the preempting short
+    t_short = time.perf_counter() - t_half
+    while True:
+        st2, done = eng.prefill_quantum(st2)
+        if done:
+            break
+    t_preempted_total = time.perf_counter() - t0
+    ctx_switch = t_preempted_total - t_uninterrupted - t_short
+
+    state_frac = st.intermediate_bytes() / max(st.kv_bytes(), 1)
+
+    t0 = time.perf_counter()
+    slot = dec.admit(0, st)
+    jax.block_until_ready(dec.cache_k)
+    t_migrate = time.perf_counter() - t0
+
+    out = {
+        "t_long_prefill_ms": t_uninterrupted * 1e3,
+        "t_short_prefill_ms": t_short * 1e3,
+        "context_switch_ms": max(ctx_switch, 0.0) * 1e3,
+        "context_switch_frac": max(ctx_switch, 0.0) / t_uninterrupted,
+        "suspend_state_vs_kv": state_frac,
+        "kv_migration_ms": t_migrate * 1e3,
+    }
+    print(f"[engine] long prefill {out['t_long_prefill_ms']:.1f}ms, "
+          f"short {out['t_short_prefill_ms']:.1f}ms, context switch "
+          f"{out['context_switch_ms']:.2f}ms "
+          f"({out['context_switch_frac']*100:.1f}% of prefill; paper: "
+          f"scheduling+switch <=0.354% of JCT on A100s)")
+    print(f"[engine] suspension intermediate = "
+          f"{out['suspend_state_vs_kv']*100:.1f}% of KV bytes "
+          f"(paper §5.1: usually <5% at production depth; scales 1/L — "
+          f"{layers}-layer toy model here)")
+    print(f"[engine] KV migration to decode engine: "
+          f"{out['kv_migration_ms']:.1f}ms (overlapped layerwise in §5.2)")
+    return out

@@ -1,0 +1,129 @@
+"""§ROOFLINE ANALYSIS: derive the three roofline terms per (arch x shape x
+mesh) from the dry-run's compiled artifacts (benchmarks/artifacts/dryrun).
+
+    compute    = HLO_FLOPs / (chips x peak FLOP/s)
+    memory     = HLO_bytes / (chips x HBM bw)
+    collective = collective_bytes / (chips x link bw)
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+cost_analysis FLOPs/bytes are PER PARTITION (the SPMD program compiled for
+one device), so terms divide by per-chip rates directly; collective bytes
+are parsed per-partition as well.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+
+ART = Path(__file__).parent / "artifacts" / "dryrun"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def load_records(mesh: str = "pod16x16") -> List[Dict]:
+    recs = []
+    for f in sorted(ART.glob(f"*.{mesh}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def scan_multiplier(arch: str) -> int:
+    """XLA cost_analysis counts a while-loop body ONCE (verified empirically:
+    a 7-iteration scanned matmul reports 1 matmul of FLOPs). Our models scan
+    over layers, so FLOPs/bytes must scale by the loop trip count. Hybrid
+    archs python-unroll segments of `attn_every` layers (each its own scan);
+    enc-dec models have two scans whose bodies are both present once.
+    Out-of-scan work (embed/logits/optimizer) gets overcounted by this
+    multiplier — the corrected terms are conservative upper bounds and the
+    'useful FLOPs' fraction a lower bound (EXPERIMENTS.md §Roofline notes)."""
+    cfg = get_config(arch)
+    if cfg.family == "hybrid":
+        return cfg.attn_every
+    if cfg.family == "audio":
+        return cfg.num_layers  # enc scan + dec scan, both bodies present
+    return cfg.num_layers
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok"):
+        return None
+    cost = rec.get("cost", {})
+    mult = scan_multiplier(rec["arch"])
+    flops = cost.get("flops", 0.0) * mult
+    byts = cost.get("bytes accessed", 0.0) * mult
+    coll = rec.get("collectives", {}).get("total", 0)
+    t_comp = flops / PEAK_FLOPS
+    t_mem = byts / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    n_chips = rec.get("n_devices", 256)
+    # MODEL_FLOPS: useful model flops per step per chip
+    if rec["kind"] == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * cfg.active_param_count() * tokens / n_chips
+    elif rec["kind"] == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * cfg.active_param_count() * tokens / n_chips
+    else:
+        model_flops = 2 * cfg.active_param_count() * shape.global_batch / n_chips
+    useful = model_flops / flops if flops else 0.0
+    mem = rec.get("memory", {})
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **{k: float(v) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": model_flops, "hlo_flops": flops,
+        "useful_flops_frac": useful,
+        "mem_gb": mem.get("per_device_total", 0) / 1e9,
+        "mem_tpu_gb": mem.get("tpu_estimate",
+                              mem.get("per_device_total", 0)) / 1e9,
+        "coll_breakdown": rec.get("collectives", {}),
+    }
+
+
+REMEDY = {
+    "compute": "raise MFU: larger per-chip tiles / fewer remat recomputes",
+    "memory": "cut HBM traffic: fuse elementwise chains, batch decode "
+              "requests so weight reads amortize, quantize KV",
+    "collective": "reshard: overlap collectives with compute, move the "
+                  "contested axis (fsdp gathers / MoE a2a) or shrink volume",
+}
+
+
+def full_table(mesh: str = "pod16x16") -> List[Dict]:
+    rows = []
+    for rec in load_records(mesh):
+        t = roofline_terms(rec)
+        if t is None:
+            if rec.get("skipped"):
+                rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                             "mesh": rec["mesh"], "skipped": True,
+                             "reason": rec.get("reason", "")[:60]})
+            continue
+        rows.append(t)
+    return rows
+
+
+def print_table(mesh: str = "pod16x16") -> List[Dict]:
+    rows = full_table(mesh)
+    hdr = f"{'arch':28s} {'shape':12s} {'comp_ms':>8s} {'mem_ms':>8s} " \
+          f"{'coll_ms':>8s} {'bound':>6s} {'useful':>7s} {'mem_GB':>7s}"
+    print(f"[roofline {mesh}]")
+    print(hdr)
+    for r in rows:
+        if r.get("skipped"):
+            print(f"{r['arch']:28s} {r['shape']:12s} SKIP ({r['reason']})")
+            continue
+        print(f"{r['arch']:28s} {r['shape']:12s} "
+              f"{r['compute_s']*1e3:8.2f} {r['memory_s']*1e3:8.2f} "
+              f"{r['collective_s']*1e3:8.2f} {r['dominant']:>6s} "
+              f"{r['useful_flops_frac']*100:6.1f}% {r['mem_tpu_gb']:7.2f}")
+    return rows

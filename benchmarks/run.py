@@ -1,0 +1,127 @@
+"""Benchmark orchestrator: one section per paper table/figure + the harness
+roofline analysis. Prints ``name,us_per_call,derived`` CSV lines at the end
+for machine consumption and a human-readable report throughout.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+from benchmarks import paper_figures as pf
+from benchmarks import roofline as rl
+from benchmarks import sp_costmodel_validation as spv
+from benchmarks.common import ART, MODELS, all_sweeps, run_model_sweep
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="only mistral_7b sweep + roofline")
+    ap.add_argument("--n-requests", type=int, default=None)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    csv_rows = []
+
+    print("=" * 78)
+    print("PecSched reproduction benchmarks (one section per paper artifact)")
+    print("=" * 78)
+
+    kw = {}
+    if args.n_requests:
+        kw["n_requests"] = args.n_requests
+    models = MODELS[:1] if args.quick else MODELS
+    sweeps = {m: run_model_sweep(m, **kw) for m in models}
+    if args.quick:  # fill remaining models with the same sweep for table code
+        sweeps = {m: sweeps[models[0]] for m in MODELS}
+
+    print("\n-- Fig.1: trace length distribution --")
+    r = pf.fig1_trace_dist()
+    csv_rows.append(("fig1_frac_under_2k", 0, r["frac_under_2k"]))
+
+    print("\n-- Fig.2: FIFO head-of-line blocking --")
+    r = pf.fig2_fifo_hol(sweeps)
+    csv_rows.append(("fig2_qd99_ratio_mistral", 0, r["mistral_7b"]["qd99_ratio"]))
+
+    print("\n-- Table 1: GPU idle rate --")
+    r = pf.table1_idle_rate(sweeps)
+    csv_rows.append(("table1_reservation_idle_mistral", 0, r["mistral_7b"]["reservation"]))
+
+    print("\n-- Fig.3: reservation vs FIFO --")
+    r = pf.fig3_reservation(sweeps)
+    csv_rows.append(("fig3_res_qd_ratio_mistral", 0, r["mistral_7b"]["qd99_vs_fifo"]))
+
+    print("\n-- Table 2: starvation under Priority --")
+    r = pf.table2_starvation(sweeps)
+    csv_rows.append(("table2_starvation_mistral", 0, r["mistral_7b"]))
+
+    print("\n-- Table 3: preemptions without fast SP --")
+    r = pf.table3_preemptions(sweeps)
+    csv_rows.append(("table3_preempt_fsp_mistral", 0, r["mistral_7b"]))
+
+    print("\n-- Figs.9-11: overall performance --")
+    r = pf.fig9_11_overall(sweeps)
+    csv_rows.append(("fig9_qd99_cut_vs_fifo_mistral", 0,
+                     r["mistral_7b"]["qd99_reduction_vs_fifo"]))
+    csv_rows.append(("fig10_tput_gain_vs_res_mistral", 0,
+                     r["mistral_7b"]["tput_gain_vs_res"]))
+    csv_rows.append(("fig11_longjct_vs_fifo_mistral", 0,
+                     r["mistral_7b"]["long_jct_vs_fifo"]))
+
+    print("\n-- Figs.12-14 + Table 6: ablations --")
+    r = pf.fig12_14_ablation(sweeps)
+    csv_rows.append(("table6_preempt_pecsched_mistral", 0,
+                     r["mistral_7b"]["pecsched"]["preemptions"]))
+
+    print("\n-- Table 7: scheduling overhead --")
+    r = pf.table7_overhead(sweeps)
+    csv_rows.append(("table7_ratio_long_mistral", 0,
+                     r["mistral_7b"]["ratio_long"]))
+
+    if not args.quick:
+        print("\n-- Fig.15: scalability to 8192 GPUs --")
+        r = pf.fig15_scalability()
+        csv_rows.append(("fig15_ratio_8192", 0, r[8192]["ratio_to_jct"]))
+
+    if not args.quick:
+        print("\n-- Engine microbenchmarks (real-execution §5.1/§5.2/§6.5) --")
+        from benchmarks import engine_overhead
+        eo = engine_overhead.run()
+        csv_rows.append(("engine_ctx_switch_ms",
+                         eo["context_switch_ms"] * 1e3, "measured"))
+        csv_rows.append(("engine_suspend_state_frac", 0,
+                         eo["suspend_state_vs_kv"]))
+
+    print("\n-- §5.3 fast-SP planner --")
+    spv.planner_selection_sweep()
+    spv.volume_formulas()
+
+    print("\n-- Roofline (single-pod baselines, all arch x shape) --")
+    rows = rl.print_table("pod16x16")
+    ok_rows = [x for x in rows if not x.get("skipped")]
+    (ART / "roofline.json").write_text(json.dumps(rows, indent=1, default=float))
+    for x in ok_rows:
+        csv_rows.append((f"roofline_{x['arch']}_{x['shape']}_dominant_ms",
+                         max(x["compute_s"], x["memory_s"],
+                             x["collective_s"]) * 1e6,
+                         x["dominant"]))
+
+    print("\n-- Roofline (multi-pod spot-check) --")
+    rl.print_table("pod2x16x16")
+
+    print("\n" + "=" * 78)
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us},{derived}")
+    print(f"total benchmark wall time: {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Validate the §5.3 fast-SP cost model: the planner's closed-form comm
+volumes vs the collective bytes XLA actually emits for the two inner SP
+variants, plus the four-combination selection across sequence lengths.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import get_config
+from repro.sp.planner import TPU_V5E, plan_fast_sp, stage_costs
+
+
+def planner_selection_sweep() -> Dict:
+    """Paper §5.3: the scheduler estimates all four (attention x MLP)
+    strategy combinations and picks the fastest — show the decision flips
+    with sequence length (short segments favour the A2A/Ulysses layout,
+    long segments amortize the all-gather/Megatron layout)."""
+    cfg = get_config("llama3_8b")
+    out = {}
+    for seq in (8192, 32768, 131072, 524288):
+        plan = plan_fast_sp(cfg, seq, n_nodes=16, gpus_per_node=16, tp=16)
+        out[seq] = {"attn": plan.attn_strategy, "mlp": plan.mlp_strategy,
+                    "est_ms_per_layer": plan.est_time * 1e3,
+                    **{k: v * 1e3 for k, v in plan.breakdown.items()}}
+        print(f"[sp-plan] seq={seq:7d} attn={plan.attn_strategy:9s} "
+              f"mlp={plan.mlp_strategy:9s} t/layer={plan.est_time*1e3:7.2f}ms "
+              f"(comm {plan.breakdown['attn_comm_s']*1e3:.2f}+"
+              f"{plan.breakdown['mlp_comm_s']*1e3:.2f}ms)")
+    return out
+
+
+def volume_formulas() -> Dict:
+    """Print the §5.3 closed-form volumes for the paper's setting."""
+    cfg = get_config("llama31_70b")
+    vols = stage_costs(cfg, s=32768, T=4, G=8)
+    print("[sp-vols] llama31-70b s=32K T=4 G=8 (elements/layer):")
+    for stage, d in vols.items():
+        for k, v in d.items():
+            print(f"  {stage:5s} {k:15s} {v:.3e}")
+    return {s: {k: float(v) for k, v in d.items()} for s, d in vols.items()}

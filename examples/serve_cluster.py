@@ -1,0 +1,75 @@
+"""End-to-end serving driver (deliverable b): a small model served with
+batched requests on a real-execution mini cluster, PecSched vs FIFO.
+
+Every prefill/decode runs actual JAX compute; PecSched's layer-granular
+preemption, KV migration to the decode engine, and resume are all exercised
+for real. Virtual time = measured compute time, so the metrics reflect the
+scheduling dynamics rather than Python overhead.
+
+    PYTHONPATH=src python examples/serve_cluster.py [--n 24]
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models import init_params
+from repro.serving.cluster import MiniCluster, ServeRequest
+
+
+def make_requests(cfg, n, seed=0, long_every=6, rps=40.0):
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(1.0 / rps))
+        is_long = (i % long_every == long_every - 1)
+        slen = 96 if is_long else int(rng.integers(8, 24))
+        reqs.append(ServeRequest(
+            rid=i, arrival=t, max_new=4, is_long=is_long,
+            tokens=rng.integers(0, cfg.vocab_size, slen).astype(np.int32)))
+    return reqs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=24)
+    ap.add_argument("--engines", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        reduced_config(get_config("mistral_7b"), layers=4),
+        dtype="float32", sliding_window=0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    print(f"mini cluster: {args.engines} engines, model {cfg.name}, "
+          f"{args.n} requests (1 in 6 long)")
+    for policy in ("pecsched", "fifo"):
+        mc = MiniCluster(cfg, params, n_engines=args.engines, policy=policy,
+                         max_len=128, layers_per_quantum=1)
+        # warm up jits so virtual time reflects steady-state compute
+        warm = ServeRequest(rid=-1, arrival=0.0, max_new=1,
+                            tokens=np.zeros(16, np.int32))
+        mc.submit(warm)
+        mc.run()
+        mc.done.clear()
+        for e in mc.engines:
+            e.vtime = 0.0
+        if mc.decode_engine:
+            mc.decode_engine.vtime = 0.0
+        for r in make_requests(cfg, args.n):
+            mc.submit(r)
+        mc.run()
+        m = mc.metrics()
+        print(f"  {policy:9s} done={m['short_done']}+{m['long_done']}L "
+              f"short qd mean={m['short_qd_mean']*1e3:7.1f}ms "
+              f"p99={m['short_qd_p99']*1e3:7.1f}ms "
+              f"long JCT={m['long_jct_mean']*1e3:7.1f}ms "
+              f"preemptions={m['preemptions']}")
+    print("expected: pecsched cuts short queueing delay vs fifo; long JCT "
+          "rises only modestly (the paper's headline trade-off)")
+
+
+if __name__ == "__main__":
+    main()

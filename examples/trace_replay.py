@@ -1,0 +1,40 @@
+"""Replay an Azure-style trace through the cluster simulator and print the
+paper's headline comparison (Figs. 9-11) for one model.
+
+    PYTHONPATH=src python examples/trace_replay.py [--model mistral_7b]
+"""
+import argparse
+import copy
+
+from repro.core import Simulator, experiment_trace, make_policy, paper_cluster
+from repro.core.workload import PAPER_SETUPS
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="mistral_7b",
+                    choices=list(PAPER_SETUPS))
+    ap.add_argument("--n", type=int, default=8000)
+    args = ap.parse_args()
+
+    cc, em = paper_cluster(args.model)
+    reqs, cap = experiment_trace(cc, em, n_requests=args.n, seed=0)
+    n_long = sum(r.is_long for r in reqs)
+    print(f"{args.model}: {cc.n_replicas} replicas (TP={cc.tp}), "
+          f"short capacity ~{cap:.0f} rps, trace {args.n} requests "
+          f"({n_long} long)")
+    print(f"{'policy':14s} {'qd_p50':>8s} {'qd_p99':>9s} {'rps':>6s} "
+          f"{'longJCT':>8s} {'starved':>8s} {'preempt':>8s}")
+    for pol in ("fifo", "reservation", "priority", "pecsched",
+                "pecsched/pe", "pecsched/fsp"):
+        s = Simulator(make_policy(pol, cc, em)).run(copy.deepcopy(reqs))
+        print(f"{pol:14s} {s['short_qd_pct'][50]:8.3f} "
+              f"{s['short_qd_pct'][99]:9.2f} {s['short_rps']:6.1f} "
+              f"{(s['long_jct_mean'] or float('nan')):8.1f} "
+              f"{s['long_starved_frac']:8.2f} {s['preemptions']:8d}")
+    print("\npaper claims: PecSched ~= Priority for shorts, 58-92% p99 cut "
+          "vs FIFO/Reservation, longs never starved, modest JCT cost.")
+
+
+if __name__ == "__main__":
+    main()

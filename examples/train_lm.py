@@ -1,0 +1,68 @@
+"""Train a ~100M-parameter dense LM for a few hundred steps on synthetic
+data (deliverable b, training flavour): full substrate — data pipeline,
+AdamW, checkpointing — in pure JAX on CPU.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import init_params, loss_fn, param_count
+from repro.training import adamw_init, adamw_update
+from repro.training.data import SyntheticLMData
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    # ~100M params; small vocab so the Markov structure is learnable
+    # within a few hundred CPU steps
+    cfg = ModelConfig(name="lm-100m", family="dense", num_layers=8,
+                      d_model=1024, num_heads=16, num_kv_heads=4,
+                      d_ff=2048, vocab_size=2048, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    print(f"model: {param_count(params)/1e6:.1f}M params")
+    opt = adamw_init(params)
+    data = SyntheticLMData(vocab=cfg.vocab_size, seq=args.seq,
+                           batch=args.batch, seed=0)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        params, opt, info = adamw_update(params, grads, opt, lr=1e-3,
+                                         weight_decay=0.01)
+        return params, opt, loss, info["grad_norm"]
+
+    t0 = time.time()
+    losses = []
+    for i, batch in zip(range(args.steps), data):
+        params, opt, loss, gn = step(params, opt, batch)
+        losses.append(float(loss))
+        if i % 25 == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            tput = (i + 1) * args.batch * args.seq / max(dt, 1e-9)
+            print(f"step {i:4d} loss={losses[-1]:.4f} gnorm={float(gn):7.3f} "
+                  f"tok/s={tput:,.0f}")
+    recent = sum(losses[-10:]) / min(len(losses), 10)
+    assert recent < losses[0] - 0.3, \
+        f"training must reduce loss ({losses[0]:.2f} -> {recent:.2f})"
+    save_checkpoint(args.ckpt, params, opt, step=args.steps)
+    p2, o2, s2 = load_checkpoint(args.ckpt)
+    assert s2 == args.steps
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}; checkpoint round-trip OK")
+
+
+if __name__ == "__main__":
+    main()

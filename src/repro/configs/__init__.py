@@ -1,0 +1,3 @@
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, PAPER_ARCH_IDS,
+                                ModelConfig, ShapeConfig, get_config,
+                                reduced_config)

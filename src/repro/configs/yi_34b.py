@@ -1,0 +1,8 @@
+"""Yi-34B-200K — paper evaluation model."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b", family="dense", source="paper §6.2",
+    num_layers=60, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=20480, vocab_size=64000,
+)

@@ -1,0 +1,11 @@
+from repro.core.cluster import ClusterConfig, build_replicas
+from repro.core.costmodel import ExecutionModel, ReplicaSpec
+from repro.core.metrics import summarize
+from repro.core.request import Phase, Request
+from repro.core.schedulers import (BasePolicy, FIFOPolicy, PecSchedPolicy,
+                                   PriorityPolicy, ReservationPolicy,
+                                   make_policy)
+from repro.core.simulator import Simulator, Work
+from repro.core.trace import TraceConfig, generate_trace, trace_stats
+from repro.core.workload import (calibrate_short_capacity, experiment_trace,
+                                 paper_cluster)

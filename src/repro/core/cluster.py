@@ -1,0 +1,66 @@
+"""Cluster model: chips -> replicas -> nodes, plus replica runtime state."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.costmodel import ExecutionModel, ReplicaSpec
+from repro.sp.planner import TPU_V5E, HardwareSpec
+
+
+@dataclass
+class ClusterConfig:
+    n_nodes: int = 4
+    gpus_per_node: int = 8
+    tp: int = 4                         # chips per model replica
+    gpu_mem_bytes: float = 80e9        # per chip
+    hw: HardwareSpec = TPU_V5E
+    n_short_decode_replicas: int = 2    # PecSched dedicated decode pool
+    max_batch_tokens: int = 4096        # short prefill batch size per replica
+    max_coloc_tokens: int = 2048        # colocation cap per replica (paper §5.2)
+    max_decode_concurrency: int = 64    # per decode replica
+    decode_batch_eff: int = 8           # effective batching for decode tput
+
+    @property
+    def n_gpus(self) -> int:
+        return self.n_nodes * self.gpus_per_node
+
+    @property
+    def n_replicas(self) -> int:
+        return self.n_gpus // self.tp
+
+    def replica_spec(self) -> ReplicaSpec:
+        return ReplicaSpec(tp=self.tp, mem_bytes=self.tp * self.gpu_mem_bytes,
+                           hw=self.hw)
+
+
+@dataclass
+class ReplicaState:
+    rid: int
+    node: int
+    role: str = "general"               # general | short_decode
+    work: Optional[object] = None       # current Work or None
+    claimed_by: Optional[int] = None    # pending long request id
+    # long-request occupancy (this replica is part of a long group)
+    long_rid: Optional[int] = None
+    long_phase: Optional[str] = None    # prefill | decode
+    coloc_tokens: int = 0               # tokens of colocated short prefill
+    decode_load: int = 0                # concurrent short decodes (decode role)
+    busy_time: float = 0.0              # accumulated for idle-rate metric
+    queue_tokens: int = 0               # local queue length in tokens (§6.2)
+
+    @property
+    def idle(self) -> bool:
+        return self.work is None and self.long_rid is None
+
+
+def build_replicas(cc: ClusterConfig, *, dedicated_decode: bool) -> List[ReplicaState]:
+    reps = []
+    per_node = cc.gpus_per_node // cc.tp
+    for i in range(cc.n_replicas):
+        reps.append(ReplicaState(rid=i, node=i // max(per_node, 1)))
+    if dedicated_decode:
+        for i in range(min(cc.n_short_decode_replicas, len(reps) - 1)):
+            reps[len(reps) - 1 - i].role = "short_decode"
+    return reps

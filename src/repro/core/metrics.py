@@ -1,0 +1,68 @@
+"""Metric aggregation matching the paper's reported quantities."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.request import Phase, Request
+
+PCTS = (1, 25, 50, 75, 99)
+
+
+def summarize(policy, t_end: float) -> Dict:
+    reqs: List[Request] = policy.all_requests
+    last_arrival = getattr(policy.sim, "last_arrival", t_end) if policy.sim else t_end
+    shorts = [r for r in reqs if not r.is_long]
+    longs = [r for r in reqs if r.is_long]
+    short_done = [r for r in shorts if r.phase == Phase.DONE]
+    long_done = [r for r in longs if r.phase == Phase.DONE]
+
+    qd = np.array([r.queueing_delay for r in shorts
+                   if r.queueing_delay is not None])
+    out = {
+        "policy": policy.name,
+        "t_end": t_end,
+        "n_short": len(shorts), "n_long": len(longs),
+        "short_completed": len(short_done),
+        "long_completed": len(long_done),
+        # paper Fig 2/3/9/12: percentile queueing delays of short requests
+        "short_qd_pct": {p: float(np.percentile(qd, p)) if len(qd) else None
+                         for p in PCTS},
+        "short_qd_mean": float(qd.mean()) if len(qd) else None,
+        # paper Fig 10/13: short throughput (RPS over the shorts' span —
+        # first arrival to last short completion; long-drain tail excluded)
+        "short_rps": _short_rps(shorts, short_done),
+        # paper Fig 11/14: average JCT of long requests
+        "long_jct_mean": (float(np.mean([r.jct for r in long_done]))
+                          if long_done else None),
+        "long_jct_p99": (float(np.percentile([r.jct for r in long_done], 99))
+                         if long_done else None),
+        # paper Table 2: starvation of longs — a long is starved if it never
+        # began service while requests were still arriving (the post-trace
+        # drain phase would not exist in continuous operation)
+        "long_starved_frac": (np.mean([
+            r.prefill_start is None or r.prefill_start > last_arrival
+            for r in longs]) if longs else 0.0),
+        # paper Table 3/6: total suspensions of long requests
+        "preemptions": getattr(policy, "preemption_events", 0),
+        # paper Table 1: GPU idle rate (Eq. 1)
+        "gpu_idle_rate": _idle_rate(policy, t_end),
+    }
+    return out
+
+
+def _short_rps(shorts: List[Request], short_done: List[Request]) -> float:
+    if not short_done:
+        return 0.0
+    start = min(r.arrival for r in shorts)
+    end = max(r.finish for r in short_done)
+    return len(short_done) / max(end - start, 1e-9)
+
+
+def _idle_rate(policy, t_end: float) -> float:
+    if t_end <= 0:
+        return 0.0
+    total_busy = sum(r.busy_time for r in policy.replicas)
+    total = t_end * len(policy.replicas)
+    return max(0.0, 1.0 - total_busy / total)

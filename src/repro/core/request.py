@@ -1,0 +1,46 @@
+"""Request model and lifecycle for cluster-level scheduling (paper §3–§5)."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+class Phase(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    PAUSED = "paused"          # long prefill suspended by preemption
+    MIGRATING = "migrating"    # short KV -> decode replica (usually overlapped)
+    DECODE = "decode"
+    DONE = "done"
+    STARVED = "starved"        # never served by simulation end (Priority)
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float
+    input_len: int
+    output_len: int            # ground truth — NOT visible to the scheduler
+    is_long: bool = False
+
+    # --- runtime bookkeeping (simulator-owned) ---
+    phase: Phase = Phase.QUEUED
+    prefill_start: Optional[float] = None   # first time prefill work began
+    first_token: Optional[float] = None     # prefill completed
+    finish: Optional[float] = None
+    n_preemptions: int = 0                  # times THIS request was suspended
+    prefill_remaining: float = 0.0          # seconds of prefill work left
+    replicas: List[int] = field(default_factory=list)
+
+    @property
+    def queueing_delay(self) -> Optional[float]:
+        if self.prefill_start is None:
+            return None
+        return self.prefill_start - self.arrival
+
+    @property
+    def jct(self) -> Optional[float]:
+        if self.finish is None:
+            return None
+        return self.finish - self.arrival

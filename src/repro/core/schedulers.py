@@ -1,0 +1,571 @@
+"""Cluster scheduling policies: FIFO, Reservation, Priority (the paper's §2.1
+baselines) and PecSched (§5) with its ablations /PE /Dis /CoL /FSP (§6.4)."""
+from __future__ import annotations
+
+import itertools
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.cluster import ClusterConfig, ReplicaState, build_replicas
+from repro.core.costmodel import ExecutionModel
+from repro.core.request import Phase, Request
+from repro.core.simulator import Work
+
+
+class BasePolicy:
+    name = "base"
+
+    def __init__(self, cc: ClusterConfig, em: ExecutionModel, *,
+                 dedicated_decode: bool = False):
+        self.cc = cc
+        self.em = em
+        self.replicas = build_replicas(cc, dedicated_decode=dedicated_decode)
+        self._wid = itertools.count()
+        self.sim = None
+        self.done_requests: List[Request] = []
+        self.all_requests: List[Request] = []
+        self.preemption_events = 0          # total suspensions (paper Table 3/6)
+        self.per_request_sched: Dict[int, float] = {}
+
+    # ------------------------------------------------------------------
+    def bind(self, sim) -> None:
+        self.sim = sim
+
+    def on_arrival(self, t: float, req: Request) -> None:
+        raise NotImplementedError
+
+    def on_done(self, t: float, work: Work) -> None:
+        raise NotImplementedError
+
+    def dispatch(self, t: float) -> None:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    def _start(self, t: float, kind: str, reqs: List[Request],
+               rep_ids: List[int], duration: float, *, colocated=False) -> Work:
+        w = Work(wid=next(self._wid), kind=kind, replica_ids=rep_ids,
+                 requests=reqs, start=t, duration=duration, colocated=colocated)
+        for rid in rep_ids:
+            rep = self.replicas[rid]
+            if colocated:
+                rep.coloc_tokens += sum(r.input_len for r in reqs) // max(len(rep_ids), 1)
+            else:
+                assert rep.work is None, f"replica {rid} busy"
+                rep.work = w
+        self.sim.push(t + duration, "DONE", w)
+        return w
+
+    def _release(self, work: Work, *, busy: Optional[float] = None) -> None:
+        for rid in work.replica_ids:
+            rep = self.replicas[rid]
+            if work.colocated:
+                rep.coloc_tokens = max(
+                    0, rep.coloc_tokens - sum(r.input_len for r in work.requests)
+                    // max(len(work.replica_ids), 1))
+            else:
+                if rep.work is work:
+                    rep.work = None
+                rep.busy_time += busy if busy is not None else work.duration
+
+    def _idle_general(self, *, unclaimed=True) -> List[ReplicaState]:
+        return [r for r in self.replicas
+                if r.role == "general" and r.idle
+                and (not unclaimed or r.claimed_by is None)]
+
+    def _batch_shorts(self, queue: deque, max_tokens: int) -> List[Request]:
+        batch, tok = [], 0
+        while queue and tok + queue[0].input_len <= max_tokens:
+            r = queue.popleft()
+            batch.append(r)
+            tok += r.input_len
+        if not batch and queue:       # single oversize short still runs alone
+            batch.append(queue.popleft())
+        return batch
+
+    # ------------------------------------------------------------------
+    def finalize(self, t: float) -> None:
+        pass
+
+    def summary(self, t_end: float) -> Dict:
+        from repro.core.metrics import summarize
+        return summarize(self, t_end)
+
+
+# ===========================================================================
+# Baselines. All run prefill+decode on the same replicas (no disaggregation)
+# and use ring-attention SP for long requests (§6.2 comparison setup).
+# ===========================================================================
+class FIFOPolicy(BasePolicy):
+    """vLLM-style FIFO: strict arrival order; long requests block the head."""
+    name = "fifo"
+
+    def __init__(self, cc, em, *, admit_long=True):
+        super().__init__(cc, em)
+        self.queue: deque = deque()
+        self.admit_long = admit_long
+
+    def on_arrival(self, t, req):
+        self.all_requests.append(req)
+        if req.is_long and not self.admit_long:
+            return
+        self.queue.append(req)
+
+    def on_done(self, t, work):
+        self._release(work)
+        for r in work.requests:
+            r.phase = Phase.DONE
+            r.finish = t
+            self.done_requests.append(r)
+
+    def _run_short_batch(self, t, reqs, rep: ReplicaState):
+        tokens = sum(r.input_len for r in reqs)
+        max_out = max(r.output_len for r in reqs)
+        d = (self.em.prefill_time(tokens, 1, sp_mode="local")
+             + self.em.decode_time(max_out, tokens // len(reqs),
+                                   batch=len(reqs)))
+        for r in reqs:
+            r.phase = Phase.PREFILL
+            r.prefill_start = t
+        self._start(t, "short_full", reqs, [rep.rid], d)
+
+    def _run_long(self, t, req, reps: List[ReplicaState]):
+        R = len(reps)
+        d = (self.em.prefill_time(req.input_len, R, sp_mode="ring")
+             + self.em.decode_time(req.output_len, req.input_len, batch=1))
+        req.phase = Phase.PREFILL
+        req.prefill_start = t
+        self._start(t, "long_full", [req], [r.rid for r in reps], d)
+
+    def dispatch(self, t):
+        while self.queue:
+            head = self.queue[0]
+            idle = self._idle_general()
+            if head.is_long:
+                R = self.em.replicas_needed(head.input_len)
+                if len(idle) < R:
+                    return                      # head-of-line blocking
+                self.queue.popleft()
+                idle.sort(key=lambda r: r.node)  # same-node preference
+                self._run_long(t, head, idle[:R])
+            else:
+                if not idle:
+                    return
+                batch = self._batch_shorts(self.queue, self.cc.max_batch_tokens)
+                # FIFO: batch must not skip over a long head; _batch_shorts only
+                # pulls consecutive heads, preserving order.
+                self._run_short_batch(t, batch, idle[0])
+
+    def _batch_shorts(self, queue, max_tokens):
+        batch, tok = [], 0
+        while queue and not queue[0].is_long and \
+                tok + queue[0].input_len <= max_tokens:
+            r = queue.popleft()
+            batch.append(r)
+            tok += r.input_len
+        if not batch and queue and not queue[0].is_long:
+            batch.append(queue.popleft())
+        return batch
+
+
+class ReservationPolicy(FIFOPolicy):
+    """Llumnix-style reservation: a dedicated replica set sized for 500 K-token
+    requests serves longs; the rest serve shorts (§6.2)."""
+    name = "reservation"
+
+    def __init__(self, cc, em, *, concurrent_longs: int = 3):
+        super().__init__(cc, em)
+        # §6.2: pre-allocate GPUs capable of serving 500K-token requests;
+        # sized for a few concurrent longs (this is what drives the paper's
+        # high reservation idle rates, Table 1).
+        R = min(em.replicas_needed(500_000) * concurrent_longs,
+                max(cc.n_replicas // 2, 1))
+        self.reserved = set(r.rid for r in self.replicas[:R])
+        self.short_queue: deque = deque()
+        self.long_queue: deque = deque()
+
+    def on_arrival(self, t, req):
+        self.all_requests.append(req)
+        (self.long_queue if req.is_long else self.short_queue).append(req)
+
+    def dispatch(self, t):
+        # long side
+        while self.long_queue:
+            idle = [r for r in self.replicas
+                    if r.rid in self.reserved and r.idle]
+            head = self.long_queue[0]
+            # the reserved pool is sized to *hold* a 500K request; a request
+            # never demands more replicas than the pool provides
+            R = min(self.em.replicas_needed(head.input_len), len(self.reserved))
+            if len(idle) < R:
+                break
+            self.long_queue.popleft()
+            self._run_long(t, head, idle[:R])
+        # short side
+        while self.short_queue:
+            idle = [r for r in self.replicas
+                    if r.rid not in self.reserved and r.idle]
+            if not idle:
+                break
+            batch = self._batch_shorts(self.short_queue, self.cc.max_batch_tokens)
+            self._run_short_batch(t, batch, idle[0])
+
+    def _batch_shorts(self, queue, max_tokens):
+        batch, tok = [], 0
+        while queue and tok + queue[0].input_len <= max_tokens:
+            r = queue.popleft()
+            batch.append(r)
+            tok += r.input_len
+        if not batch and queue:
+            batch.append(queue.popleft())
+        return batch
+
+
+class PriorityPolicy(FIFOPolicy):
+    """Past-Future-style priority: shorts get strict priority; longs run only
+    when no short is waiting — which starves them (§3.2 Table 2)."""
+    name = "priority"
+
+    def __init__(self, cc, em):
+        super().__init__(cc, em)
+        self.short_queue: deque = deque()
+        self.long_queue: deque = deque()
+
+    def on_arrival(self, t, req):
+        self.all_requests.append(req)
+        (self.long_queue if req.is_long else self.short_queue).append(req)
+
+    def dispatch(self, t):
+        while self.short_queue:
+            idle = self._idle_general()
+            if not idle:
+                return
+            batch = ReservationPolicy._batch_shorts(self, self.short_queue,
+                                                    self.cc.max_batch_tokens)
+            self._run_short_batch(t, batch, idle[0])
+        while self.long_queue and not self.short_queue:
+            idle = self._idle_general()
+            head = self.long_queue[0]
+            R = self.em.replicas_needed(head.input_len)
+            if len(idle) < R:
+                return
+            self.long_queue.popleft()
+            self._run_long(t, head, idle[:R])
+
+    def finalize(self, t):
+        for r in self.long_queue:
+            r.phase = Phase.STARVED
+
+
+# ===========================================================================
+# PecSched (§5) with ablation flags
+# ===========================================================================
+@dataclass
+class LongState:
+    req: Request
+    rep_ids: List[int]
+    phase: str = "prefill"              # prefill | decode
+    paused: bool = False
+    remaining: float = 0.0              # seconds of work left when paused
+    decode_remaining: float = 0.0
+
+
+class PecSchedPolicy(BasePolicy):
+    """Preemptive scheduling + prefill/decode disaggregation & colocation +
+    fast SP. Ablations: preemption (/PE), disagg (/Dis), coloc (/CoL),
+    fastsp (/FSP) — each flag False reproduces the paper's variant."""
+    name = "pecsched"
+
+    def __init__(self, cc, em, *, preemption=True, disagg=True, coloc=True,
+                 fastsp=True):
+        self.preemption = preemption
+        self.disagg = disagg
+        self.coloc = coloc
+        self.fastsp = fastsp
+        super().__init__(cc, em, dedicated_decode=disagg)
+        if not any(r.role == "short_decode" for r in self.replicas):
+            self.disagg = False
+        self.short_queue: deque = deque()
+        self.long_queue: deque = deque()
+        self.longs: Dict[int, LongState] = {}    # rid -> state
+        self.decode_queue: deque = deque()       # shorts waiting for decode pool
+        suffix = []
+        if not preemption: suffix.append("PE")
+        if not disagg: suffix.append("Dis")
+        if not coloc: suffix.append("CoL")
+        if not fastsp: suffix.append("FSP")
+        if suffix:
+            self.name = "pecsched/" + "".join(suffix)
+
+    # ------------------------------------------------------------------
+    def on_arrival(self, t, req):
+        self.all_requests.append(req)
+        (self.long_queue if req.is_long else self.short_queue).append(req)
+
+    # ------------------------------------------------------------------
+    def on_done(self, t, work):
+        if work.kind == "short_prefill":
+            self._release(work)
+            for r in work.requests:
+                r.first_token = t
+            if self.disagg:
+                # KV streams to the decode replica DURING prefill (overlapped,
+                # §5.2) — only a negligible tail remains at completion.
+                for r in work.requests:
+                    r.phase = Phase.MIGRATING
+                    self.decode_queue.append(r)
+                self._drain_decode_queue(t)
+            else:
+                # /Dis: decode continues on the same replicas (holds them)
+                tokens = sum(r.input_len for r in work.requests)
+                max_out = max(r.output_len for r in work.requests)
+                d = self.em.decode_time(
+                    max_out, tokens // len(work.requests),
+                    batch=len(work.requests))
+                for r in work.requests:
+                    r.phase = Phase.DECODE
+                self._start(t, "short_decode_inplace", work.requests,
+                            work.replica_ids, d)
+        elif work.kind == "short_decode_inplace":
+            self._release(work)
+            self._finish_requests(t, work.requests)
+        elif work.kind == "short_decode":
+            for rid in work.replica_ids:
+                self.replicas[rid].decode_load -= len(work.requests)
+                self.replicas[rid].busy_time += work.duration
+            self._finish_requests(t, work.requests)
+            self._drain_decode_queue(t)
+        elif work.kind == "short_prefill_coloc":
+            self._release(work)
+            for r in work.requests:
+                r.first_token = t
+            if self.disagg:
+                for r in work.requests:
+                    r.phase = Phase.MIGRATING
+                    self.decode_queue.append(r)
+                self._drain_decode_queue(t)
+            else:
+                self._finish_requests(t, work.requests, decode_inline_at=t)
+        elif work.kind == "long_prefill":
+            self._release(work)
+            req = work.requests[0]
+            st = self.longs[req.rid]
+            req.first_token = t
+            st.phase = "decode"
+            for rid in st.rep_ids:
+                self.replicas[rid].long_phase = "decode"
+            d = self.em.decode_time(req.output_len, req.input_len, batch=1) \
+                / max(len(st.rep_ids), 1)
+            req.phase = Phase.DECODE
+            st.decode_remaining = d
+            self._start(t, "long_decode", [req], st.rep_ids, d)
+        elif work.kind == "long_decode":
+            self._release(work)
+            req = work.requests[0]
+            st = self.longs.pop(req.rid)
+            for rid in st.rep_ids:
+                rep = self.replicas[rid]
+                rep.long_rid = None
+                rep.long_phase = None
+            req.phase = Phase.DONE
+            req.finish = t
+            self.done_requests.append(req)
+        else:
+            raise ValueError(work.kind)
+
+    def _finish_requests(self, t, reqs, decode_inline_at=None):
+        for r in reqs:
+            if decode_inline_at is not None:
+                # /Dis colocated path: decode modeled inline
+                t = decode_inline_at + self.em.decode_time(
+                    r.output_len, r.input_len, batch=8)
+            r.phase = Phase.DONE
+            r.finish = t
+            self.done_requests.append(r)
+
+    # ------------------------------------------------------------------
+    def _drain_decode_queue(self, t):
+        pool = [r for r in self.replicas if r.role == "short_decode"]
+        if not pool:
+            return
+        while self.decode_queue:
+            pool.sort(key=lambda r: r.decode_load)
+            rep = pool[0]
+            cap = self.cc.max_decode_concurrency - rep.decode_load
+            if cap <= 0:
+                return
+            batch = []
+            while self.decode_queue and len(batch) < cap:
+                batch.append(self.decode_queue.popleft())
+            max_out = max(r.output_len for r in batch)
+            avg_in = sum(r.input_len for r in batch) // len(batch)
+            d = self.em.decode_time(max_out, avg_in, batch=len(batch))
+            for r in batch:
+                r.phase = Phase.DECODE
+            rep.decode_load += len(batch)
+            w = Work(wid=next(self._wid), kind="short_decode",
+                     replica_ids=[rep.rid], requests=batch, start=t, duration=d)
+            self.sim.push(t + d, "DONE", w)
+
+    # ------------------------------------------------------------------
+    def _start_short_prefill(self, t, batch, rep_ids, *, colocated=False):
+        tokens = sum(r.input_len for r in batch)
+        # §5.2: tokens balanced across the replicas of the group
+        d = self.em.prefill_time(tokens // max(len(rep_ids), 1), 1,
+                                 sp_mode="local")
+        for r in batch:
+            r.phase = Phase.PREFILL
+            if r.prefill_start is None:
+                r.prefill_start = t
+        kind = "short_prefill_coloc" if colocated else "short_prefill"
+        self._start(t, kind, batch, rep_ids, d, colocated=colocated)
+
+    def _pause_long(self, t, st: LongState):
+        """Suspend a running long prefill (or decode under /CoL)."""
+        for rid in st.rep_ids:
+            rep = self.replicas[rid]
+            w = rep.work
+            if w is not None and not w.canceled:
+                w.canceled = True
+                elapsed = t - w.start
+                if w.kind == "long_prefill":
+                    st.remaining = max(w.duration - elapsed, 0.0)
+                else:
+                    st.decode_remaining = max(w.duration - elapsed, 0.0)
+                self._release(w, busy=elapsed)
+        st.paused = True
+        st.req.phase = Phase.PAUSED
+        st.req.n_preemptions += 1
+        self.preemption_events += 1
+
+    def _resume_long(self, t, st: LongState):
+        st.paused = False
+        if st.phase == "prefill":
+            st.req.phase = Phase.PREFILL
+            self._start(t, "long_prefill", [st.req], st.rep_ids, st.remaining)
+        else:
+            st.req.phase = Phase.DECODE
+            self._start(t, "long_decode", [st.req], st.rep_ids,
+                        st.decode_remaining)
+
+    # ------------------------------------------------------------------
+    def dispatch(self, t):
+        self._dispatch_longs(t)
+        self._dispatch_shorts(t)
+        self._resume_paused(t)
+
+    def _dispatch_longs(self, t):
+        while self.long_queue:
+            head = self.long_queue[0]
+            R = min(self.em.replicas_needed(head.input_len),
+                    sum(1 for r in self.replicas if r.role == "general"))
+            # Claim R replicas up-front: idle ones, then ones finishing their
+            # current short work (§5: a long "only waits for the ongoing short
+            # requests to complete their prefill phases"). Claimed replicas
+            # admit no NEW work; the long starts once all R drain.
+            claimed = [r for r in self.replicas if r.claimed_by == head.rid]
+            if len(claimed) < R:
+                cands = [r for r in self.replicas
+                         if r.role == "general" and r.claimed_by is None
+                         and r.long_rid is None]
+                cands.sort(key=lambda r: (r.work is not None,
+                                          r.work.end if r.work else 0.0))
+                for r in cands:
+                    if len(claimed) >= R:
+                        break
+                    r.claimed_by = head.rid
+                    claimed.append(r)
+            if len(claimed) < R or any(r.work is not None for r in claimed):
+                return                   # wait for claimed work to drain
+            self.long_queue.popleft()
+            for r in claimed:
+                r.claimed_by = None
+                r.long_rid = head.rid
+                r.long_phase = "prefill"
+            sp = "fastsp" if self.fastsp else "ring"
+            d = self.em.prefill_time(head.input_len, R, sp_mode=sp)
+            head.phase = Phase.PREFILL
+            head.prefill_start = t
+            st = LongState(req=head, rep_ids=[r.rid for r in claimed])
+            self.longs[head.rid] = st
+            self._start(t, "long_prefill", [head], st.rep_ids, d)
+
+    def _dispatch_shorts(self, t):
+        while self.short_queue:
+            placed = False
+            # 1) idle general replica (not claimed, not in a long group)
+            idle = [r for r in self._idle_general() if r.long_rid is None]
+            if idle:
+                batch = self._batch_shorts(self.short_queue,
+                                           self.cc.max_batch_tokens)
+                self._start_short_prefill(t, batch, [idle[0].rid])
+                placed = True
+            # 2) colocate with long decode (§5.2)
+            elif self.coloc:
+                cands = [r for r in self.replicas
+                         if r.long_phase == "decode"
+                         and r.coloc_tokens < self.cc.max_coloc_tokens]
+                if cands:
+                    cap = sum(self.cc.max_coloc_tokens - r.coloc_tokens
+                              for r in cands)
+                    batch = self._batch_shorts(self.short_queue, cap)
+                    self._start_short_prefill(t, batch,
+                                              [r.rid for r in cands],
+                                              colocated=True)
+                    placed = True
+            if not placed and self.preemption:
+                # 3) preempt a running long prefill (decode too under /CoL).
+                # §5: the long resumes as soon as the preempting short
+                # prefills complete — a later short wave must preempt AGAIN
+                # (each suspension counted, per Table 3/6 semantics). This
+                # also bounds long starvation under sustained short pressure.
+                victims = [st for st in self.longs.values()
+                           if not st.paused and (
+                               st.phase == "prefill"
+                               or (not self.coloc and st.phase == "decode"))]
+                if victims:
+                    st = max(victims, key=lambda s: len(s.rep_ids))
+                    self._pause_long(t, st)
+                    cap = self.cc.max_batch_tokens * len(st.rep_ids)
+                    batch = self._batch_shorts(self.short_queue, cap)
+                    self._start_short_prefill(t, batch, st.rep_ids)
+                    placed = True
+            if not placed:
+                return
+
+    def _resume_paused(self, t):
+        # a paused long resumes the moment its replicas are free — new shorts
+        # must go through a fresh preemption (counted) to take them back.
+        for st in self.longs.values():
+            if st.paused and all(self.replicas[r].work is None
+                                 for r in st.rep_ids):
+                self._resume_long(t, st)
+
+    def finalize(self, t):
+        for r in self.long_queue:
+            if r.prefill_start is None:
+                r.phase = Phase.STARVED
+
+
+def make_policy(name: str, cc: ClusterConfig, em: ExecutionModel) -> BasePolicy:
+    name = name.lower()
+    if name == "fifo":
+        return FIFOPolicy(cc, em)
+    if name == "fifo_noshort":  # Fig.2 "without long requests" arm
+        return FIFOPolicy(cc, em, admit_long=False)
+    if name == "reservation":
+        return ReservationPolicy(cc, em)
+    if name == "priority":
+        return PriorityPolicy(cc, em)
+    if name == "pecsched":
+        return PecSchedPolicy(cc, em)
+    if name == "pecsched/pe":
+        return PecSchedPolicy(cc, em, preemption=False)
+    if name == "pecsched/dis":
+        return PecSchedPolicy(cc, em, disagg=False)
+    if name == "pecsched/col":
+        return PecSchedPolicy(cc, em, coloc=False)
+    if name == "pecsched/fsp":
+        return PecSchedPolicy(cc, em, fastsp=False)
+    raise ValueError(name)

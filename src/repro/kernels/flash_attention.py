@@ -1,0 +1,136 @@
+"""Pallas TPU flash attention (prefill) — causal / sliding-window / GQA.
+
+TPU adaptation of the paper's Triton FlashAttention-2: online-softmax state
+(m, l, acc) lives in VMEM scratch and is carried across the *sequential*
+innermost grid dimension (KV blocks), so the kernel composes with ring
+attention — each ring hop feeds another range of KV blocks into the same
+accumulator (see repro/sp/ring.py which reuses the blockwise math).
+
+Block sizes default to (128, 128): MXU-aligned on the (8,128)/(128,128)
+register tiling. VMEM working set per step ≈ bq*D + 2*bk*D + bq*bk floats.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(kvlen_ref,                    # SMEM (1,)  valid kv length
+                  q_ref, k_ref, v_ref,          # VMEM blocks
+                  o_ref,                        # VMEM out block
+                  m_ref, l_ref, acc_ref,        # scratch
+                  *, bq: int, bk: int, n_kv_blocks: int, causal: bool,
+                  sliding_window: int, q_offset: int, scale: float):
+    ib = pl.program_id(0)
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # Skip fully-masked (strictly future) KV blocks under causal masking.
+    block_needed = jnp.logical_or(
+        not causal, (iq * bq + q_offset + bq - 1) >= ik * bk)
+    if sliding_window > 0:
+        block_needed = jnp.logical_and(
+            block_needed, (iq * bq + q_offset) - (ik * bk + bk - 1) < sliding_window)
+
+    @pl.when(block_needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)             # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = kpos < kvlen_ref[ib]
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        if sliding_window > 0:
+            mask = jnp.logical_and(mask, qpos - kpos < sliding_window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...][:, 0]                       # (bq,)
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = (l_ref[...][:, 0] * corr + p.sum(axis=1))[:, None]
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new[:, None]
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...][:, 0]
+        # rows with no valid kv (fully masked) produce 0, not NaN
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, ...] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sliding_window", "q_offset", "scale",
+                     "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, sliding_window: int = 0,
+                    q_offset: int = 0, kv_len: Optional[jax.Array] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q (B,H,Sq,D); k, v (B,KV,Sk,D); returns (B,H,Sq,D)."""
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    n_rep = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    sq_p, sk_p = -(-sq // bq) * bq, -(-sk // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+    if kv_len is None:
+        kv_len = jnp.full((b,), sk, jnp.int32)
+    kv_len = kv_len.astype(jnp.int32)
+    nq, nk = sq_p // bq, sk_p // bk
+    grid = (b, h, nq, nk)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, n_kv_blocks=nk, causal=causal,
+        sliding_window=sliding_window, q_offset=q_offset, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, d),
+                             lambda ib, ih, iq, ik, *refs: (ib, ih, iq, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda ib, ih, iq, ik, *refs: (ib, ih // n_rep, ik, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda ib, ih, iq, ik, *refs: (ib, ih // n_rep, ik, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bq, d),
+                                   lambda ib, ih, iq, ik, *refs: (ib, ih, iq, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq_p, d), q.dtype),
+        interpret=interpret,
+    )(kv_len, qp, kp, vp)
+    return out[:, :, :sq]

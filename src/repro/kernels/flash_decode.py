@@ -1,0 +1,110 @@
+"""Pallas TPU flash-decode: one new query token against a long KV cache.
+
+This is the memory-bound serve_step hot loop (decode_32k / long_500k shapes).
+Grid iterates KV blocks sequentially per (batch, head); the online-softmax
+state lives in VMEM scratch, so HBM traffic is exactly one pass over the
+valid cache prefix — the roofline-optimal schedule for decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(kvlen_ref,                  # SMEM (B,)
+                   q_ref, k_ref, v_ref,        # VMEM blocks
+                   o_ref,
+                   m_ref, l_ref, acc_ref,
+                   *, bk: int, n_kv_blocks: int, sliding_window: int):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = kvlen_ref[ib]
+    newest = kv_len - 1
+    lo = 0 if sliding_window == 0 else jnp.maximum(newest - sliding_window + 1, 0)
+    # Skip blocks entirely outside [lo, kv_len)
+    needed = jnp.logical_and(ik * bk < kv_len,
+                             (ik + 1) * bk > lo if sliding_window else True)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        d = q.shape[-1]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * d ** -0.5
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = kpos < kv_len
+        if sliding_window > 0:
+            mask = jnp.logical_and(mask, kpos >= lo)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...][:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = (l_ref[...][:, 0] * corr + p.sum(axis=1))[:, None]
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new[:, None]
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...][:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, ...] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sliding_window", "block_k", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 cache_len: jax.Array, *, sliding_window: int = 0,
+                 block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """q (B,H,D); k, v (B,KV,S,D); cache_len (B,); returns (B,H,D)."""
+    b, h, d = q.shape
+    kvh, s = k.shape[1], k.shape[2]
+    n_rep = h // kvh
+    bk = min(block_k, s)
+    sp = -(-s // bk) * bk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
+    nk = sp // bk
+    grid = (b, h, nk)
+    kernel = functools.partial(_decode_kernel, bk=bk, n_kv_blocks=nk,
+                               sliding_window=sliding_window)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, d), lambda ib, ih, ik, *r: (ib, ih, 0, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda ib, ih, ik, *r: (ib, ih // n_rep, ik, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda ib, ih, ik, *r: (ib, ih // n_rep, ik, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, d), lambda ib, ih, ik, *r: (ib, ih, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), q[:, :, None], kp, vp)
+    return out[:, :, 0]

@@ -1,0 +1,130 @@
+"""Pure-jnp reference oracles for every kernel.
+
+These are the ground truth for the Pallas kernels (interpret=True allclose
+sweeps) and the small-shape implementation used in CPU tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, KV, S, D) -> (B, KV*n_rep, S, D) by head repetition (GQA)."""
+    if n_rep == 1:
+        return k
+    b, kv, s, d = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, kv, n_rep, s, d)).reshape(b, kv * n_rep, s, d)
+
+
+def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, sliding_window: int = 0,
+                  q_offset: int = 0, kv_len: jax.Array | None = None,
+                  scale: float | None = None) -> jax.Array:
+    """Naive full-materialization attention.
+
+    q: (B, H, Sq, D); k, v: (B, KV, Sk, D) with KV | H.
+    q_offset: absolute position of q[...,0,:] (for decode / ring segments).
+    kv_len: optional (B,) valid KV lengths (entries >= kv_len are masked).
+    """
+    b, h, sq, d = q.shape
+    kv = k.shape[1]
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    sk = k.shape[2]
+    q_pos = jnp.arange(sq)[:, None] + q_offset
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if sliding_window > 0:
+        mask &= q_pos - k_pos < sliding_window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    if kv_len is not None:
+        valid = k_pos[None] < kv_len[:, None, None]  # (B,1,Sk) -> broadcast
+        logits = jnp.where(valid[:, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                               cache_len: jax.Array, *, sliding_window: int = 0
+                               ) -> jax.Array:
+    """Single-token decode: q (B, H, D) vs cache k/v (B, KV, S, D), valid length
+    per batch element ``cache_len`` (B,). Query position = cache_len - 1."""
+    b, h, d = q.shape
+    out = mha_reference(q[:, :, None], k, v, causal=False,
+                        sliding_window=0, kv_len=cache_len)
+    if sliding_window > 0:
+        # mask positions older than window from the newest token
+        s = k.shape[2]
+        k_pos = jnp.arange(s)[None]
+        newest = cache_len[:, None] - 1
+        valid = (k_pos <= newest) & (newest - k_pos < sliding_window)
+        kk = jnp.where(valid[:, None, :, None], k, 0)
+        logits = jnp.einsum("bhd,bhkd->bhk",
+                            q.astype(jnp.float32),
+                            _repeat_kv(kk, h // k.shape[1]).astype(jnp.float32)) * d ** -0.5
+        logits = jnp.where(valid[:, None], logits, NEG_INF)
+        p = jax.nn.softmax(logits, -1)
+        vv = _repeat_kv(v, h // v.shape[1]).astype(jnp.float32)
+        return jnp.einsum("bhk,bhkd->bhd", p, vv).astype(q.dtype)
+    return out[:, :, 0]
+
+
+def ssd_reference(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                  C: jax.Array, D: jax.Array, *,
+                  init_state: jax.Array | None = None,
+                  return_state: bool = False):
+    """Mamba2 SSD sequential-scan oracle.
+
+    x:  (b, s, nh, hd)   inputs per head
+    dt: (b, s, nh)       softplus-activated step sizes (>0)
+    A:  (nh,)            negative decay rates (A < 0)
+    B:  (b, s, ns)       input projection (shared across heads)
+    C:  (b, s, ns)       output projection
+    D:  (nh,)            skip
+    state: (b, nh, hd, ns)
+    y = C·h + D*x, h_t = exp(A*dt_t) h_{t-1} + dt_t * (x_t ⊗ B_t)
+    """
+    b, s, nh, hd = x.shape
+    ns = B.shape[-1]
+    xf, dtf, Bf, Cf = (t.astype(jnp.float32) for t in (x, dt, B, C))
+    Af = A.astype(jnp.float32)
+    h0 = (jnp.zeros((b, nh, hd, ns), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (b,nh,hd), (b,nh), (b,ns), (b,ns)
+        decay = jnp.exp(Af[None] * dtt)  # (b, nh)
+        dBx = jnp.einsum("bnh,bs->bnhs", xt * dtt[..., None], Bt)
+        h = h * decay[..., None, None] + dBx
+        yt = jnp.einsum("bnhs,bs->bnh", h, Ct)
+        return h, yt
+
+    inputs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+              Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    hT, ys = jax.lax.scan(step, h0, inputs)
+    y = ys.transpose(1, 0, 2, 3) + D.astype(jnp.float32)[None, None, :, None] * xf
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, hT
+    return y
+
+
+def ssd_step_reference(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                       C: jax.Array, D: jax.Array, state: jax.Array):
+    """One decode step. x (b, nh, hd), dt (b, nh), B/C (b, ns), state (b,nh,hd,ns)."""
+    xf = x.astype(jnp.float32)
+    decay = jnp.exp(A.astype(jnp.float32)[None] * dt)  # (b, nh)
+    dBx = jnp.einsum("bnh,bs->bnhs", xf * dt[..., None], B.astype(jnp.float32))
+    state = state * decay[..., None, None] + dBx
+    y = jnp.einsum("bnhs,bs->bnh", state, C.astype(jnp.float32))
+    y = y + D.astype(jnp.float32)[None, :, None] * xf
+    return y.astype(x.dtype), state

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunk scan.
+
+Per (batch, head): the grid walks chunks sequentially; the running SSM state
+(headdim × d_state) lives in VMEM scratch — the within-chunk work is two
+MXU-friendly matmuls (the "state-space duality" quadratic form), the
+cross-chunk recurrence is a rank-1-per-token state update folded into the
+scratch carry. This is the TPU-native layout of the paper-adjacent SSD
+algorithm: chunk = VMEM tile, recurrence = sequential grid dim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+                y_ref, hT_ref,
+                state_ref,
+                *, chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)          # (L, hd)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # (L,)
+    B = b_ref[0].astype(jnp.float32)                # (L, ns)
+    C = c_ref[0].astype(jnp.float32)                # (L, ns)
+    A = a_ref[0, 0]                                 # scalar
+    D = d_ref[0, 0]
+
+    dA = dt * A                                     # (L,) log-decay
+    seg = jnp.cumsum(dA)                            # (L,)
+    seg_total = seg[-1]
+
+    # intra-chunk quadratic form
+    rel = seg[:, None] - seg[None, :]               # (L, L)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = li >= lj
+    decay = jnp.where(tri, jnp.exp(jnp.where(tri, rel, 0.0)), 0.0)
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (L, L)
+    scores = cb * decay * dt[None, :]
+    y_intra = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (L, hd)
+
+    # inter-chunk contribution from entering state
+    h_in = state_ref[...]                           # (hd, ns)
+    y_inter = jnp.exp(seg)[:, None] * jax.lax.dot_general(
+        C, h_in, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter + D * x).astype(y_ref.dtype)
+
+    # state update: h' = exp(seg_total) h + sum_u exp(seg_total - seg_u) dt_u x_u B_u^T
+    w = jnp.exp(seg_total - seg) * dt               # (L,)
+    upd = jax.lax.dot_general(x * w[:, None], B, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (hd, ns)
+    state_ref[...] = h_in * jnp.exp(seg_total) + upd
+
+    @pl.when(ic == n_chunks - 1)
+    def _final():
+        hT_ref[0, 0, ...] = state_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "return_state", "interpret"))
+def ssd_scan_pallas(x, dt, A, B, C, D, *, chunk: int = 256,
+                    init_state: Optional[jax.Array] = None,
+                    return_state: bool = False, interpret: bool = False):
+    """Shapes as ref.ssd_reference: x (b,s,nh,hd), dt (b,s,nh), A/D (nh,),
+    B/C (b,s,ns); returns y (b,s,nh,hd) [, final state (b,nh,hd,ns)]."""
+    b, s, nh, hd = x.shape
+    ns = B.shape[-1]
+    L = min(chunk, s)
+    pad = (-s) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # pad dt with zeros => decay 1, no state contribution
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // L
+    h0 = (jnp.zeros((b, nh, hd, ns), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    A2 = jnp.broadcast_to(A.astype(jnp.float32)[None], (b, nh))
+    D2 = jnp.broadcast_to(D.astype(jnp.float32)[None], (b, nh))
+
+    grid = (b, nh, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=L, n_chunks=nc)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, 1, hd), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, L, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1, 1), lambda ib, ih, ic: (ib, ih)),
+            pl.BlockSpec((1, L, ns), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, L, ns), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, 1), lambda ib, ih, ic: (ib, ih)),
+            pl.BlockSpec((1, 1, hd, ns), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, hd), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, hd, ns), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, sp, nh, hd), x.dtype),
+            jax.ShapeDtypeStruct((b, nh, hd, ns), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, ns), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A2, B, C, D2, h0)
+    y = y[:, :s]
+    if return_state:
+        return y, hT
+    return y

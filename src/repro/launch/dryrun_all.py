@@ -1,0 +1,69 @@
+"""Drive the full dry-run matrix: every (arch x shape x mesh) combo in its
+own subprocess (the 512-device XLA flag is process-global).
+
+    PYTHONPATH=src python -m repro.launch.dryrun_all [--jobs 6] [--missing-only]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES
+
+OUT = Path("benchmarks/artifacts/dryrun")
+
+
+def run_one(arch: str, shape: str, multi_pod: bool) -> dict:
+    tag = f"{arch}.{shape}." + ("pod2x16x16" if multi_pod else "pod16x16")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", str(OUT)]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    t0 = time.time()
+    p = subprocess.run(cmd, capture_output=True, text=True, timeout=3000)
+    rec_path = OUT / f"{tag}.json"
+    rec = json.loads(rec_path.read_text()) if rec_path.exists() else {
+        "ok": False, "error": p.stdout[-500:] + p.stderr[-500:]}
+    status = "OK" if rec.get("ok") else ("SKIP" if rec.get("skipped") else "FAIL")
+    print(f"{status:4s} {tag:60s} {time.time()-t0:6.1f}s", flush=True)
+    if status == "FAIL":
+        print("  error:", str(rec.get("error", ""))[:300], flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=6)
+    ap.add_argument("--missing-only", action="store_true")
+    ap.add_argument("--archs", nargs="*", default=ARCH_IDS)
+    args = ap.parse_args()
+    OUT.mkdir(parents=True, exist_ok=True)
+    combos = []
+    for arch in args.archs:
+        for shape in INPUT_SHAPES:
+            for mp in (False, True):
+                tag = f"{arch}.{shape}." + ("pod2x16x16" if mp else "pod16x16")
+                if args.missing_only and (OUT / f"{tag}.json").exists():
+                    rec = json.loads((OUT / f"{tag}.json").read_text())
+                    if rec.get("ok") or rec.get("skipped"):
+                        continue
+                combos.append((arch, shape, mp))
+    print(f"{len(combos)} combos, {args.jobs} workers", flush=True)
+    with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+        futs = [ex.submit(run_one, *c) for c in combos]
+        recs = [f.result() for f in futs]
+    ok = sum(1 for r in recs if r.get("ok"))
+    skip = sum(1 for r in recs if r.get("skipped"))
+    fail = len(recs) - ok - skip
+    print(f"done: {ok} ok, {skip} skipped, {fail} failed")
+    if fail:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

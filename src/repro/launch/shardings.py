@@ -1,0 +1,194 @@
+"""Sharding specs for params, optimizer state, batches and caches.
+
+Profiles (DESIGN.md §5):
+  train   — batch over (pod,data); TP over "model"; fsdp weight+optimizer
+            sharding over (pod,data).
+  prefill — batch over (pod,data); TP over "model"; fsdp only when the
+            TP-sharded weights alone would not fit a chip.
+  decode  — batch over (pod,data) (seq over them instead when B == 1);
+            KV-cache *sequence* sharded over "model" (tensor-parallel
+            flash-decode); TP weights over "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+HBM_PER_CHIP = 16e9  # TPU v5e
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _ax(axes):
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _div(n: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return False
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return n % size == 0 and n >= size
+
+
+def needs_fsdp(cfg: ModelConfig, mesh: Mesh, kind: str) -> bool:
+    if kind == "train":
+        return True
+    tp = mesh.shape["model"]
+    weight_bytes = cfg.param_count() * 2
+    # serving: keep TP-sharded weights under ~40% of a chip so the KV cache
+    # and transients have headroom; larger models go weight-sharded (fsdp)
+    return weight_bytes / tp > 0.4 * HBM_PER_CHIP
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh: Mesh, *,
+                fsdp: bool) -> Any:
+    """PartitionSpec tree matching the params pytree (built from eval_shape)."""
+    ba = _ax(batch_axes(mesh)) if fsdp else None
+
+    def spec_for(path: Tuple[str, ...], x) -> P:
+        name = path[-1]
+        shape = x.shape
+        nd = len(shape)
+        model = "model"
+
+        def m(dim):  # "model" if the dim is shardable
+            return model if _div(shape[dim], mesh, model) else None
+
+        def f(dim):  # fsdp axis if shardable
+            return ba if (ba and _div(shape[dim], mesh, ba)) else None
+
+        if name == "embed":
+            return P(m(0), f(1))
+        if name == "lm_head":
+            return P(f(0), m(1))
+        if name in ("wq", "wk", "wv"):
+            return P(None, f(1), m(2)) if nd == 3 else P(f(0), m(1))
+        if name == "wo":
+            return P(None, m(1), f(2)) if nd == 3 else P(m(0), f(1))
+        if name in ("bq", "bk", "bv"):
+            return P(None, m(1)) if nd == 2 else P(m(0))
+        if name in ("w_gate", "w_up", "w_down"):
+            if nd == 4:   # MoE experts (L, E, a, b): expert-parallel on model
+                return P(None, m(1), f(2), None)
+            if nd == 3:
+                if name == "w_down":
+                    return P(None, m(1), f(2))
+                return P(None, f(1), m(2))
+            if name == "w_down":
+                return P(m(0), f(1))
+            return P(f(0), m(1))
+        if name == "router":
+            return P(None, None, m(2)) if nd == 3 else P(None, m(1))
+        if name == "in_proj":   # mamba: model-replicated (heads not divisible)
+            return P(None, f(1), None) if nd == 3 else P(f(0), None)
+        if name == "out_proj":
+            return P(None, None, f(2)) if nd == 3 else P(None, f(1))
+        return P(*([None] * nd))   # norms, conv, A_log, D, dt_bias, step...
+
+    return _tree_map_with_names(spec_for, params_shape)
+
+
+def _tree_map_with_names(fn, tree):
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()}
+        if hasattr(node, "_fields"):   # NamedTuple: use field names as path
+            vals = [walk(path + (f,), getattr(node, f)) for f in node._fields]
+            return type(node)(*vals)
+        if isinstance(node, (list, tuple)) and not hasattr(node, "shape"):
+            return type(node)(walk(path + (str(i),), v)
+                              for i, v in enumerate(node))
+        return fn(path, node)
+    return walk((), tree)
+
+
+def opt_specs(pspecs, opt_shape) -> Any:
+    """AdamW state: moments mirror the param specs; factored vr/vc drop the
+    factored dim from the param spec. step replicated."""
+    from repro.training.optimizer import AdamWState
+
+    def leaf(spec, mom):
+        if "v" in mom:
+            return {"m": spec, "v": spec}
+        parts = list(spec)
+        while len(parts) < len(mom["m"].shape):
+            parts.append(None)
+        return {"m": spec,
+                "vr": P(*parts[:-1]),
+                "vc": P(*(parts[:-2] + parts[-1:]))}
+
+    is_mom = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    is_spec = lambda x: isinstance(x, P)
+    import jax
+    flat_s, treedef = jax.tree.flatten(pspecs, is_leaf=is_spec)
+    flat_m = jax.tree.flatten(opt_shape.moments, is_leaf=is_mom)[0]
+    moments = jax.tree.unflatten(treedef, [leaf(s, m)
+                                           for s, m in zip(flat_s, flat_m)])
+    return AdamWState(step=P(), moments=moments)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Dict[str, P]:
+    ba = _ax(batch_axes(mesh))
+    B = shape.global_batch
+    bspec = ba if (ba and _div(B, mesh, ba)) else None
+    seq_axes = None
+    if B == 1:  # long-context: shard the sequence instead
+        seq_axes = _ax(batch_axes(mesh) + ("model",))
+    out: Dict[str, P] = {}
+    if shape.kind in ("train", "prefill"):
+        tok_seq = seq_axes if seq_axes else None
+        out["tokens"] = P(bspec, tok_seq)
+        if shape.kind == "train":
+            out["labels"] = P(bspec, tok_seq)
+        if cfg.family == "vlm":
+            out["embeds"] = P(bspec, None, None)
+        if cfg.family == "audio":
+            out["frames"] = P(bspec, tok_seq, None)
+    else:  # decode: one token per sequence
+        out["token"] = P(bspec)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh: Mesh, *,
+                global_batch: int) -> Any:
+    """KV caches: batch over (pod,data), SEQUENCE over 'model' (tensor-
+    parallel flash-decode). B==1 -> sequence over everything."""
+    ba = batch_axes(mesh)
+    bspec = _ax(ba) if _div(global_batch, mesh, _ax(ba)) else None
+    seq = _ax(ba + ("model",)) if global_batch == 1 else "model"
+
+    def spec_for(path, x):
+        name = path[-1] if path else ""
+        shape = x.shape
+        if name in ("k", "v", "sh_k", "sh_v", "cross_k", "cross_v"):
+            # (L, B, KV, S, hd)
+            s_ax = seq if _div(shape[3], mesh, seq) else None
+            return P(None, bspec, None, s_ax, None)
+        if name in ("len", "cross_len"):
+            return P(bspec)
+        if name == "conv":      # (L, B, K, Cd)
+            return P(None, bspec, None, None)
+        if name == "ssm":       # (L, B, nh, hd, ns)
+            return P(None, bspec, None, None, None)
+        return P(*([None] * len(shape)))
+
+    return _tree_map_with_names(spec_for, cache_shape)
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

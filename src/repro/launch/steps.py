@@ -1,0 +1,120 @@
+"""Step functions + ShapeDtypeStruct input specs for every (arch x shape).
+
+input_specs() follows the harness contract: weak-type-correct, shardable,
+no device allocation — decode shapes lower serve_step (ONE token against a
+seq_len KV cache), train/prefill lower full-sequence steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.models import model as mdl
+from repro.models.sharding import standard_rules, use_rules
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+
+AUDIO_DECODER_TRAIN_LEN = 512   # transcript length for enc-dec train batches
+AUDIO_SELF_CACHE = 1024         # decoder self-KV budget (outputs <= 800)
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("full softmax attention at 524K context is quadratic; "
+                       "run only for SSM/hybrid/SWA archs (DESIGN.md §4)")
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            P = min(cfg.frontend_tokens, S // 2)
+            out = {"tokens": sds((B, S - P), i32),
+                   "embeds": sds((B, P, d), act)}
+        elif cfg.family == "audio":
+            # encoder consumes the (long) frame sequence; decoder teacher-
+            # forces a transcript (train) or starts from BOS (prefill)
+            dec = AUDIO_DECODER_TRAIN_LEN if shape.kind == "train" else 1
+            out = {"tokens": sds((B, dec), i32),
+                   "frames": sds((B, S, d), act)}
+        else:
+            out = {"tokens": sds((B, S), i32)}
+        if shape.kind == "train":
+            out["labels"] = sds(out["tokens"].shape, i32)
+        return out
+    # decode
+    return {"token": sds((B,), i32)}
+
+
+def cache_structs(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    B, S = shape.global_batch, shape.seq_len
+    ring = bool(cfg.sliding_window) and shape.name == "long_500k"
+    max_len = min(cfg.sliding_window, S) if ring else S
+    enc_len = S if cfg.family == "audio" else 0
+    if cfg.family == "audio":
+        max_len = AUDIO_SELF_CACHE
+    return jax.eval_shape(
+        functools.partial(mdl.init_cache, cfg, B, max_len, enc_len=enc_len))
+
+
+def params_structs(cfg: ModelConfig) -> Any:
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(functools.partial(mdl.init_params, cfg=cfg), rng)
+
+
+def opt_structs(params_shape) -> Any:
+    return jax.eval_shape(adamw_init, params_shape)
+
+
+# ---------------------------------------------------------------------------
+def build_train_step(cfg: ModelConfig, *, impl: str = "xla", remat: bool = True,
+                     mesh=None, long_context: bool = False):
+    rules = standard_rules(mesh, long_context=long_context, fsdp=True) \
+        if mesh is not None else None
+
+    def train_step(params, opt_state, batch):
+        with use_rules(rules):
+            def lf(p):
+                return mdl.loss_fn(cfg, p, batch, impl=impl, remat=remat)
+            (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(params)
+            params, opt_state, info = adamw_update(params, grads, opt_state)
+            return params, opt_state, {"loss": loss,
+                                       "grad_norm": info["grad_norm"]}
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, *,
+                       impl: str = "xla", mesh=None):
+    rules = standard_rules(mesh, long_context=(shape.global_batch == 1)) \
+        if mesh is not None else None
+
+    def prefill_step(params, batch, cache):
+        with use_rules(rules):
+            logits, cache = mdl.prefill(cfg, params, batch, cache, impl=impl)
+            return logits, cache
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, *,
+                     impl: str = "xla", mesh=None):
+    ring = bool(cfg.sliding_window) and shape.name == "long_500k"
+    rules = standard_rules(mesh, long_context=(shape.global_batch == 1)) \
+        if mesh is not None else None
+
+    def serve_step(params, cache, token):
+        with use_rules(rules):
+            logits, cache = mdl.decode_step(cfg, params, cache, token,
+                                            impl=impl, ring_buffer=ring)
+            return logits, cache
+    return serve_step

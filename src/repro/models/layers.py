@@ -1,0 +1,209 @@
+"""Shared building blocks: RMSNorm, RoPE, SwiGLU, GQA attention (train /
+prefill / cached decode). Parameters are plain pytrees; layer params carry a
+leading L axis and are consumed via lax.scan in model.py."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.sharding import constrain, constrain_first, current_rules
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, n, hd), positions (..., S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    cos = cos[..., None, :]   # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def swiglu(x: jax.Array, p: Dict[str, jax.Array]) -> jax.Array:
+    g = jax.nn.silu(linear(x, p["w_gate"]))
+    u = linear(x, p["w_up"])
+    h = constrain(g * u, "batch", None, "ff")  # ff priority; seq omitted
+    return linear(h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jax.Array       # (B, KV, S_max, hd)
+    v: jax.Array
+    # per-batch valid length lives at model level ("len"), shared across layers
+
+
+def init_attn(rng, cfg: ModelConfig, n_layers: int, dtype) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(rng, 4)
+    std = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (n_layers, d, H * hd), dtype) * std,
+        "wk": jax.random.normal(ks[1], (n_layers, d, KV * hd), dtype) * std,
+        "wv": jax.random.normal(ks[2], (n_layers, d, KV * hd), dtype) * std,
+        "wo": jax.random.normal(ks[3], (n_layers, H * hd, d), dtype) * std,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_layers, H * hd), dtype)
+        p["bk"] = jnp.zeros((n_layers, KV * hd), dtype)
+        p["bv"] = jnp.zeros((n_layers, KV * hd), dtype)
+    return p
+
+
+def attention_block(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+                    positions: jax.Array, *, causal: bool = True,
+                    sliding_window: int = 0,
+                    cache: Optional[KVCache] = None,
+                    cache_len: Optional[jax.Array] = None,
+                    write_cache: bool = False,
+                    cross_kv: Optional[KVCache] = None,
+                    cross_len: Optional[jax.Array] = None,
+                    impl: str = "auto"):
+    """Full-sequence attention (train/prefill). x (B, S, d).
+
+    write_cache: also return a KVCache holding the projected K/V (prefill).
+    cross_kv: if given, attend to it instead of self K/V (cross-attention).
+    """
+    B, S, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, S, H, hd)
+    if cross_kv is None:
+        k = linear(x, p["wk"], p.get("bk")).reshape(B, S, KV, hd)
+        v = linear(x, p["wv"], p.get("bv")).reshape(B, S, KV, hd)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        kv_len = None
+    else:
+        k = cross_kv.k.transpose(0, 2, 1, 3)  # (B, Skv, KV, hd)
+        v = cross_kv.v.transpose(0, 2, 1, 3)
+        causal = False
+        kv_len = cross_len
+    # head sharding preferred; falls back to q-sequence sharding when the
+    # head count doesn't divide the TP axis (e.g. qwen2's 28 heads on 16)
+    qh = constrain_first(q.transpose(0, 2, 1, 3),
+                         ("batch", "heads", None, None),
+                         ("batch", None, "seq", None))
+    kh = constrain_first(k.transpose(0, 2, 1, 3),
+                         ("batch", "kv_heads", None, None),
+                         ("batch", None, None, None))
+    vh = constrain_first(v.transpose(0, 2, 1, 3),
+                         ("batch", "kv_heads", None, None),
+                         ("batch", None, None, None))
+    o = ops.attention(qh, kh, vh, causal=causal, sliding_window=sliding_window,
+                      kv_len=kv_len, impl=impl)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    out = linear(o, p["wo"])
+    out = constrain(out, "batch", None, None)
+    if write_cache and cross_kv is None:
+        return out, KVCache(k=kh, v=vh)
+    return out
+
+
+def decode_attention_block(cfg: ModelConfig, p: Dict[str, jax.Array],
+                           x: jax.Array, cache: KVCache, cache_len: jax.Array,
+                           *, sliding_window: int = 0,
+                           ring_buffer: bool = False,
+                           cross: bool = False,
+                           cross_len: Optional[jax.Array] = None,
+                           impl: str = "auto"):
+    """One-token decode. x (B, d); cache k/v (B, KV, S_max, hd);
+    cache_len (B,) = tokens already in cache. Returns (out (B,d), new cache).
+
+    ring_buffer: write position = cache_len % S_max (SWA long-context mode).
+    cross: attend to a fixed cross cache (no write, no RoPE on K).
+    """
+    B, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, H, hd)
+    if cross:
+        o = ops.decode_attention(q, cache.k, cache.v, cross_len, impl=impl)
+        return linear(o.reshape(B, H * hd), p["wo"]), cache
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, KV, hd)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, KV, hd)
+    q = rope(q[:, None], cache_len[:, None], cfg.rope_theta)[:, 0]  # pos = len
+    k = rope(k[:, None], cache_len[:, None], cfg.rope_theta)[:, 0]
+    S_max = cache.k.shape[2]
+    pos = (cache_len % S_max) if ring_buffer else cache_len
+    # Scatter-free cache write: per-batch positions as a one-hot mask. A
+    # per-batch dynamic scatter forces the SPMD partitioner to replicate a
+    # sequence-sharded cache ("involuntary full rematerialization"); the
+    # masked select keeps every shard local — TPU-idiomatic for seq-sharded
+    # KV (cost: one extra pass over the cache, decode is memory-bound anyway).
+    if B == 1:
+        # §Perf iter C: a single sequence has ONE write position — a scalar
+        # dynamic_update_slice touches one slot instead of rewriting the
+        # whole cache with a one-hot mask (2 full passes per layer)
+        new_k = jax.lax.dynamic_update_slice(
+            cache.k, k[:, :, None, :].astype(cache.k.dtype), (0, 0, pos[0], 0))
+        new_v = jax.lax.dynamic_update_slice(
+            cache.v, v[:, :, None, :].astype(cache.v.dtype), (0, 0, pos[0], 0))
+    else:
+        oh = (jnp.arange(S_max)[None] == pos[:, None])        # (B, S_max)
+        ohk = oh[:, None, :, None]
+        new_k = jnp.where(ohk, k[:, :, None, :].astype(cache.k.dtype), cache.k)
+        new_v = jnp.where(ohk, v[:, :, None, :].astype(cache.v.dtype), cache.v)
+    eff_len = jnp.minimum(cache_len + 1, S_max) if ring_buffer else cache_len + 1
+    win = 0 if ring_buffer else sliding_window
+    o = _cached_decode_attention(q, new_k, new_v, eff_len, win, impl)
+    out = linear(o.reshape(B, H * hd), p["wo"])
+    return out, KVCache(k=new_k, v=new_v)
+
+
+def _cached_decode_attention(q, k, v, eff_len, sliding_window, impl):
+    """Dispatch decode attention: when sharding rules mark the cache sequence
+    dim as sharded (rules["cache_seq"]), use the shard_map distributed
+    flash-decode (partial per shard + LSE-merge all-reduce) so no shard ever
+    materializes the full sequence; otherwise plain local attention."""
+    rules = current_rules()
+    seq_axes = rules.rules.get("cache_seq") if rules is not None else None
+    if seq_axes:
+        axes = (seq_axes,) if isinstance(seq_axes, str) else tuple(seq_axes)
+        size = 1
+        for a in axes:
+            size *= rules.mesh.shape[a]
+        if k.shape[2] % size == 0 and k.shape[2] >= size:
+            from repro.sp.decode import distributed_decode_attention
+            batch_rule = rules.rules.get("batch")
+            ba = ((batch_rule,) if isinstance(batch_rule, str)
+                  else tuple(batch_rule or ()))
+            return distributed_decode_attention(
+                q, k, v, eff_len, mesh=rules.mesh, seq_axes=axes,
+                sliding_window=sliding_window, batch_axes=ba)
+    return ops.decode_attention(q, k, v, eff_len,
+                                sliding_window=sliding_window, impl=impl)
+
+
+def init_mlp(rng, cfg: ModelConfig, n_layers: int, dtype, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": jax.random.normal(ks[0], (n_layers, d, ff), dtype) * d ** -0.5,
+        "w_up": jax.random.normal(ks[1], (n_layers, d, ff), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(ks[2], (n_layers, ff, d), dtype) * ff ** -0.5,
+    }

@@ -1,0 +1,113 @@
+"""Mamba2 (SSD) block: in_proj -> causal depthwise conv -> SSD scan -> gated
+RMSNorm -> out_proj. Prefill uses the chunked SSD (kernels.ops.ssd_scan);
+decode carries (conv_state, ssm_state) — constant memory per token, which is
+what makes SSM/hybrid archs eligible for the long_500k shape."""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import rms_norm
+from repro.models.sharding import constrain, constrain_first
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, conv_w - 1, di + 2*ns)
+    ssm: jax.Array    # (B, nh, hd, ns) float32
+
+
+def init_mamba2(rng, cfg: ModelConfig, n_layers: int, dtype) -> Dict[str, jax.Array]:
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * ns
+    proj_out = 2 * di + 2 * ns + nh   # z, x, B, C, dt
+    ks = jax.random.split(rng, 4)
+    return {
+        "in_proj": jax.random.normal(ks[0], (n_layers, d, proj_out), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (n_layers, cfg.ssm_conv, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((n_layers, conv_dim), dtype),
+        "dt_bias": jnp.zeros((n_layers, nh), jnp.float32),
+        "A_log": jnp.broadcast_to(jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+                                  (n_layers, nh)).copy(),
+        "D": jnp.ones((n_layers, nh), jnp.float32),
+        "norm": jnp.ones((n_layers, di), dtype),
+        "out_proj": jax.random.normal(ks[2], (n_layers, di, d), dtype) * di ** -0.5,
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. xbc (B, S, Cd), w (K, Cd). Returns (y, new_state)."""
+    K = w.shape[0]
+    B, S, Cd = xbc.shape
+    pad = (jnp.zeros((B, K - 1, Cd), xbc.dtype) if prev is None else prev.astype(xbc.dtype))
+    xp = jnp.concatenate([pad, xbc], axis=1)        # (B, S + K - 1, Cd)
+    y = sum(xp[:, i:i + S] * w[i][None, None] for i in range(K)) + b[None, None]
+    new_state = xp[:, S:]                           # last K-1 inputs
+    return jax.nn.silu(y), new_state
+
+
+def mamba2_block(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+                 state: Optional[SSMState] = None, *, return_state: bool = False,
+                 impl: str = "auto"):
+    """x (B, S, d) -> y (B, S, d) [, SSMState]."""
+    B, S, d = x.shape
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    u = jnp.einsum("bsd,dp->bsp", x, p["in_proj"].astype(x.dtype))
+    z, xs, Bm, Cm, dt = jnp.split(u, [di, 2 * di, 2 * di + ns, 2 * di + 2 * ns], axis=-1)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    prev_conv = state.conv if state is not None else None
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], prev_conv)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + ns], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, nh, hd)
+    # SSD head sharding preferred (mamba2-130m: 24 heads don't divide 16
+    # -> fall back to sequence sharding of the chunked scan)
+    xh = constrain_first(xh, ("batch", None, "heads", None),
+                         ("batch", "seq", None, None))
+    init_ssm = state.ssm if state is not None else None
+    y, ssm_state = ops.ssd_scan(xh, dt, A, Bm, Cm, p["D"], chunk=cfg.ssm_chunk,
+                                init_state=init_ssm, return_state=True, impl=impl)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype))
+    if return_state:
+        return out, SSMState(conv=conv_state, ssm=ssm_state)
+    return out
+
+
+def mamba2_step(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+                state: SSMState):
+    """One-token decode. x (B, d) -> (y (B, d), new state)."""
+    B, d = x.shape
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    u = jnp.einsum("bd,dp->bp", x, p["in_proj"].astype(x.dtype))
+    z, xs, Bm, Cm, dt = jnp.split(u, [di, 2 * di, 2 * di + ns, 2 * di + 2 * ns], axis=-1)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)    # (B, Cd)
+    K = p["conv_w"].shape[0]
+    window = jnp.concatenate([state.conv.astype(xbc.dtype), xbc[:, None]], axis=1)  # (B,K,Cd)
+    y = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(xbc.dtype)) + p["conv_b"]
+    xbc = jax.nn.silu(y)
+    new_conv = window[:, 1:]
+    xs, Bm, Cm = jnp.split(xbc, [di, di + ns], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None])
+    A = -jnp.exp(p["A_log"])
+    yh, new_ssm = ops.ssd_step(xs.reshape(B, nh, hd), dt, A, Bm, Cm, p["D"],
+                               state.ssm)
+    y = yh.reshape(B, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, p["out_proj"].astype(x.dtype))
+    return out, SSMState(conv=new_conv, ssm=new_ssm)
+
+
+def init_ssm_state(cfg: ModelConfig, n_layers: int, batch: int, dtype) -> SSMState:
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    conv_dim = di + 2 * ns
+    return SSMState(
+        conv=jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        ssm=jnp.zeros((n_layers, batch, nh, hd, ns), jnp.float32),
+    )

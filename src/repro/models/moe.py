@@ -1,0 +1,108 @@
+"""Top-k routed Mixture-of-Experts FFN with capacity-based einsum dispatch.
+
+The dispatch/combine einsums contract over the expert axis, so sharding the
+expert dimension over the "experts" logical axis (mesh "model") turns them
+into the expert-parallel all-to-all pattern under GSPMD — the collective the
+roofline analysis tracks for the MoE architectures.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import constrain
+
+
+def init_moe(rng, cfg: ModelConfig, n_layers: int, dtype) -> Dict[str, jax.Array]:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": jax.random.normal(ks[0], (n_layers, d, E), jnp.float32) * d ** -0.5,
+        "w_gate": jax.random.normal(ks[1], (n_layers, E, d, ff), dtype) * d ** -0.5,
+        "w_up": jax.random.normal(ks[2], (n_layers, E, d, ff), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(ks[3], (n_layers, E, ff, d), dtype) * ff ** -0.5,
+    }
+    if cfg.moe_shared_expert:
+        kg, ku, kd = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": jax.random.normal(kg, (n_layers, d, ff), dtype) * d ** -0.5,
+            "w_up": jax.random.normal(ku, (n_layers, d, ff), dtype) * d ** -0.5,
+            "w_down": jax.random.normal(kd, (n_layers, ff, d), dtype) * ff ** -0.5,
+        }
+    return p
+
+
+MOE_GROUP_SIZE = 2048  # tokens per routing group (GShard-style)
+
+
+def moe_block(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+              *, capacity_factor: float | None = None,
+              group_size: int = MOE_GROUP_SIZE):
+    """x (B, S, d) -> (y (B, S, d), aux) with aux = load-balance loss terms.
+
+    GShard-style GROUPED dispatch: tokens are split into groups of
+    ~group_size; capacity and the dispatch one-hots are per-group, so the
+    dispatch tensor is (G, Tg, E, C) with Tg*C fixed — O(T) total instead of
+    the O(T^2) a single global capacity buffer would cost. The G dim shards
+    over the batch axes, E over "experts" (mesh model) — contracting over G
+    with E sharded is the expert-parallel all-to-all."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    cf = capacity_factor or cfg.capacity_factor
+    T = B * S
+    # pick a group count that divides T, aiming for ~group_size tokens/group
+    G = max(T // group_size, 1)
+    while T % G:
+        G -= 1
+    Tg = T // G
+    xt = x.reshape(G, Tg, d)
+    xt = constrain(xt, "batch", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                   # (G, Tg, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)           # (G, Tg, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = max(int(Tg * K * cf / E), 1)
+    # position of each (t, k) assignment within its expert's per-group buffer
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)   # (G, Tg, K, E)
+    flat = onehot.reshape(G, Tg * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat           # (G, Tg*K, E)
+    pos = (pos_in_expert * flat).sum(-1).reshape(G, Tg, K)
+    keep = pos < C                                            # drop overflow
+    gate_vals = gate_vals * keep
+
+    slot_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                             dtype=xt.dtype)[..., :C]         # (G, Tg, K, C)
+    exp_oh = jax.nn.one_hot(expert_idx, E, dtype=xt.dtype)    # (G, Tg, K, E)
+    disp = jnp.einsum("gtke,gtkc->gtec", exp_oh, slot_oh)     # (G, Tg, E, C)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", disp, xt)        # (G, E, C, d)
+    expert_in = constrain(expert_in, "batch", "experts", None, None)
+    wg = p["w_gate"].astype(xt.dtype)
+    wu = p["w_up"].astype(xt.dtype)
+    wd = p["w_down"].astype(xt.dtype)
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, wg))
+    u = jnp.einsum("gecd,edf->gecf", expert_in, wu)
+    h = constrain(g * u, "batch", "experts", None, None)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, wd)          # (G, E, C, d)
+    expert_out = constrain(expert_out, "batch", "experts", None, None)
+
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", exp_oh, slot_oh,
+                      gate_vals.astype(xt.dtype))             # (G, Tg, E, C)
+    y = jnp.einsum("gtec,gecd->gtd", comb, expert_out)
+    y = y.reshape(B, S, d).astype(x.dtype)
+
+    if "shared" in p:
+        from repro.models.layers import swiglu
+        y = y + swiglu(x, p["shared"])
+
+    # Switch-style load-balance aux loss
+    me = probs.mean((0, 1))                                   # (E,)
+    ce = jax.nn.one_hot(expert_idx[..., 0], E).mean((0, 1))
+    aux = {"lb_loss": (E * (me * ce).sum()).astype(jnp.float32),
+           "dropped_frac": 1.0 - keep.mean()}
+    return y, aux

@@ -1,0 +1,148 @@
+"""Logical-axis sharding: models annotate activations/params with *logical*
+axis names; a ShardingRules mapping (set per launch config) resolves them to
+mesh axes. Changing the mapping — not the model code — is the perf lever used
+in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, None, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis names -> mesh axis (or tuple, or None=replicated)."""
+    mesh: Mesh
+    rules: Dict[str, Axis] = field(default_factory=dict)
+
+    def spec(self, logical_axes: Tuple[Optional[str], ...]) -> P:
+        out = []
+        for ax in logical_axes:
+            if ax is None:
+                out.append(None)
+            else:
+                out.append(self.rules.get(ax))
+        return P(*out)
+
+    def sharding(self, logical_axes: Tuple[Optional[str], ...]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes))
+
+
+_current: contextvars.ContextVar[Optional[ShardingRules]] = \
+    contextvars.ContextVar("sharding_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    tok = _current.set(rules)
+    try:
+        yield rules
+    finally:
+        _current.reset(tok)
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return _current.get()
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint via logical axes; no-op without active rules.
+    Axes whose mesh extent does not divide the dimension are dropped."""
+    rules = _current.get()
+    if rules is None:
+        return x
+    resolved = []
+    for dim, ax in zip(x.shape, logical_axes):
+        mesh_ax = rules.rules.get(ax) if ax else None
+        if mesh_ax is None:
+            resolved.append((None, ()))
+            continue
+        axes = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+        size = 1
+        for a in axes:
+            size *= rules.mesh.shape[a]
+        ok = dim % size == 0 and dim >= size
+        resolved.append((ax, axes) if ok else (None, ()))
+    # a mesh axis may appear in at most one dim: FIRST eligible dim wins —
+    # call sites order logical axes by priority (e.g. attention passes
+    # "heads" and omits "seq" so head sharding is preferred)
+    used = set()
+    fixed = [None] * len(resolved)
+    for i, (ax, axes) in enumerate(resolved):
+        if ax is not None and not (set(axes) & used):
+            fixed[i] = ax
+            used.update(axes)
+    return jax.lax.with_sharding_constraint(x, rules.sharding(tuple(fixed)))
+
+
+def constrain_first(x: jax.Array, *options) -> jax.Array:
+    """Apply the first option whose every mapped mesh axis divides its dim —
+    e.g. attention prefers head sharding but falls back to sequence sharding
+    when the head count doesn't divide the TP axis (qwen2: 28 heads on 16)."""
+    rules = _current.get()
+    if rules is None:
+        return x
+    for opt in options:
+        ok = True
+        for dim, ax in zip(x.shape, opt):
+            mesh_ax = rules.rules.get(ax) if ax else None
+            if mesh_ax is None:
+                if ax is not None:
+                    ok = False  # logical axis maps to nothing: option invalid
+                    break
+                continue
+            axes = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+            size = 1
+            for a in axes:
+                size *= rules.mesh.shape[a]
+            if dim % size != 0 or dim < size:
+                ok = False
+                break
+        if ok:
+            return constrain(x, *opt)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Standard rule sets (see DESIGN.md §5). batch axes absorb the pod axis.
+# ---------------------------------------------------------------------------
+def standard_rules(mesh: Mesh, *, long_context: bool = False,
+                   fsdp: bool = False, seq_over_model: bool = True
+                   ) -> ShardingRules:
+    """Default logical->mesh mapping.
+
+    seq_over_model: Megatron-style sequence parallelism of the residual
+    stream over the TP axis — activations (and remat carries) shrink by the
+    model-axis size; XLA inserts the all-gather/reduce-scatter pair around
+    attention/MLP. This is the train-mode default; EXPERIMENTS.md §Perf
+    ablates it.
+    """
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    batch: Axis = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+    if long_context:
+        seq: Axis = (batch_axes + ("model",)) if seq_over_model else batch
+    else:
+        seq = "model" if seq_over_model else None
+    rules: Dict[str, Axis] = {
+        "batch": batch,
+        "seq": seq,
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "experts": "model",
+        "vocab": "model",
+        "embed": None,
+        "fsdp": batch if fsdp else None,          # weight sharding on batch axes
+        "state": None,
+        # KV caches: sequence dim sharded over the TP axis (tensor-parallel
+        # flash-decode; B==1 long-context also spreads over the batch axes)
+        "cache_seq": (batch_axes + ("model",)) if long_context else ("model",),
+    }
+    return ShardingRules(mesh=mesh, rules=rules)

@@ -1,0 +1,3 @@
+from repro.serving.cluster import MiniCluster, ServeRequest
+from repro.serving.engine import PrefillState, ReplicaEngine
+from repro.serving.kvcache import PagedKVCache

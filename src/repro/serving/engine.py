@@ -1,0 +1,166 @@
+"""Replica engine: real JAX execution with LAYER-GRANULAR preemptible prefill.
+
+This is the execution-level counterpart of the simulator: PecSched's §5.1
+preemption state ("KV of completed layers + one layer's intermediate data")
+is exactly what PrefillState holds. A preempted prefill resumes from its
+layer index with bit-identical results (asserted in tests).
+
+The engine targets the dense family (the paper's evaluation models are all
+dense); decode runs slot-batched with per-slot cache lengths — continuous
+batching at the iteration level.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import model as mdl
+from repro.models.layers import KVCache
+
+
+@dataclass
+class PrefillState:
+    """Suspension state of a paused prefill (paper §5.1)."""
+    rid: int
+    tokens: jnp.ndarray                   # (1, S) int32
+    x: jnp.ndarray                        # (1, S, d) — current intermediate
+    layer: int                            # next layer to execute
+    kv_k: List[jnp.ndarray] = field(default_factory=list)   # per-layer (1,KV,S,hd)
+    kv_v: List[jnp.ndarray] = field(default_factory=list)
+
+    def intermediate_bytes(self) -> int:
+        return self.x.size * self.x.dtype.itemsize
+
+    def kv_bytes(self) -> int:
+        return sum(a.size * a.dtype.itemsize for a in self.kv_k) * 2
+
+
+class ReplicaEngine:
+    """One model replica: preemptible prefill + slot-batched decode."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
+                 max_len: int = 512, layers_per_quantum: int = 2):
+        assert cfg.family in ("dense",), "engine demo targets dense family"
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.lpq = layers_per_quantum
+        d = cfg.d_model
+        KV, hd, nl = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+        dt = jnp.dtype(cfg.dtype)
+        # slot-batched decode cache
+        self.cache_k = jnp.zeros((nl, max_slots, KV, max_len, hd), dt)
+        self.cache_v = jnp.zeros((nl, max_slots, KV, max_len, hd), dt)
+        self.slot_len = jnp.zeros((max_slots,), jnp.int32)
+        self.slot_rid = [-1] * max_slots
+        self._embed = jax.jit(self._embed_fn)
+        self._layer_slice = jax.jit(self._layer_slice_fn,
+                                    static_argnames=("lo", "hi"))
+        self._finalize = jax.jit(self._finalize_fn)
+        self._decode = jax.jit(self._decode_fn)
+
+    # ---- compiled pieces --------------------------------------------------
+    def _embed_fn(self, tokens):
+        x = self.params["embed"][tokens].astype(jnp.dtype(self.cfg.dtype))
+        return x
+
+    def _layer_slice_fn(self, x, *, lo: int, hi: int):
+        cfg = self.cfg
+        sub = jax.tree.map(lambda a: a[lo:hi], self.params["layers"])
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(x, pl):
+            x, kv = mdl._dense_layer(cfg, pl, x, positions,
+                                     sliding_window=cfg.sliding_window,
+                                     impl="xla", write_cache=True)
+            return x, kv
+        x, kvs = jax.lax.scan(body, x, sub)
+        return x, kvs
+
+    def _finalize_fn(self, x):
+        cfg = self.cfg
+        x = L.rms_norm(x, self.params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            self.params["lm_head"].astype(x.dtype))
+        return logits[:, -1]
+
+    def _decode_fn(self, cache_k, cache_v, slot_len, tokens):
+        cfg = self.cfg
+        cache = {"len": slot_len, "k": cache_k, "v": cache_v}
+        logits, cache = mdl.decode_step(cfg, self.params, cache, tokens,
+                                        impl="xla")
+        return logits, cache["k"], cache["v"], cache["len"]
+
+    # ---- prefill (preemptible) ---------------------------------------------
+    def start_prefill(self, rid: int, tokens: jnp.ndarray) -> PrefillState:
+        x = self._embed(tokens)
+        return PrefillState(rid=rid, tokens=tokens, x=x, layer=0)
+
+    def prefill_quantum(self, st: PrefillState) -> Tuple[PrefillState, bool]:
+        """Run up to layers_per_quantum layers; returns (state, done)."""
+        lo = st.layer
+        hi = min(lo + self.lpq, self.cfg.num_layers)
+        x, kvs = self._layer_slice(st.x, lo=lo, hi=hi)
+        st.x = x
+        for i in range(hi - lo):
+            st.kv_k.append(kvs.k[i])
+            st.kv_v.append(kvs.v[i])
+        st.layer = hi
+        return st, hi == self.cfg.num_layers
+
+    def prefill_logits(self, st: PrefillState) -> jnp.ndarray:
+        assert st.layer == self.cfg.num_layers
+        return self._finalize(st.x)
+
+    # ---- decode slots -------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_rid) if r < 0]
+
+    def admit(self, rid: int, st: PrefillState) -> int:
+        """Install a finished prefill's KV into a decode slot (the §5.2 KV
+        migration — here an in-memory copy)."""
+        slot = self.free_slots()[0]
+        S = st.tokens.shape[1]
+        k = jnp.stack(st.kv_k, 0)[:, 0]      # (L, KV, S, hd)
+        v = jnp.stack(st.kv_v, 0)[:, 0]
+        pad = self.max_len - S
+        if pad < 0:
+            raise ValueError("sequence longer than engine max_len")
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        self.cache_k = self.cache_k.at[:, slot].set(k)
+        self.cache_v = self.cache_v.at[:, slot].set(v)
+        self.slot_len = self.slot_len.at[slot].set(S)
+        self.slot_rid[slot] = rid
+        return slot
+
+    def evict(self, slot: int) -> None:
+        self.slot_rid[slot] = -1
+        self.slot_len = self.slot_len.at[slot].set(0)
+
+    def decode_iteration(self, tokens: Dict[int, int]) -> Dict[int, int]:
+        """One continuous-batching iteration over the active slots.
+        tokens: slot -> last token id. Returns slot -> next token id."""
+        tok = jnp.zeros((self.max_slots,), jnp.int32)
+        for s, t in tokens.items():
+            tok = tok.at[s].set(t)
+        logits, self.cache_k, self.cache_v, new_len = self._decode(
+            self.cache_k, self.cache_v, self.slot_len, tok)
+        # only advance active slots
+        active = jnp.zeros((self.max_slots,), bool)
+        for s in tokens:
+            active = active.at[s].set(True)
+        self.slot_len = jnp.where(active, new_len, self.slot_len)
+        out = {}
+        nxt = jnp.argmax(logits, -1)
+        for s in tokens:
+            out[s] = int(nxt[s])
+        return out

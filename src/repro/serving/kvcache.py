@@ -1,0 +1,110 @@
+"""Paged KV cache (PagedAttention-style, the mechanism of the paper's vLLM
+substrate): a fixed pool of fixed-size blocks + per-request block tables.
+Non-contiguous physical storage eliminates fragmentation; gather by block
+table materializes the contiguous view the attention kernels consume.
+
+Pure JAX: the pool is a pytree; allocation metadata is host-side (block
+tables are tiny and scheduler-owned, exactly as in vLLM).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PagedKVCache:
+    """Pool: k/v (L, n_blocks, KV, block_size, hd)."""
+    k: jax.Array
+    v: jax.Array
+    block_size: int
+    free: List[int] = field(default_factory=list)
+    tables: Dict[int, List[int]] = field(default_factory=dict)   # rid -> blocks
+    lengths: Dict[int, int] = field(default_factory=dict)        # rid -> tokens
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def create(cls, n_layers: int, n_blocks: int, kv_heads: int,
+               block_size: int, head_dim: int, dtype=jnp.bfloat16
+               ) -> "PagedKVCache":
+        shape = (n_layers, n_blocks, kv_heads, block_size, head_dim)
+        return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   block_size=block_size, free=list(range(n_blocks)))
+
+    @property
+    def n_blocks(self) -> int:
+        return self.k.shape[1]
+
+    def blocks_needed(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    def can_admit(self, tokens: int) -> bool:
+        return len(self.free) >= self.blocks_needed(tokens)
+
+    # ------------------------------------------------------------------
+    def admit(self, rid: int, k: jax.Array, v: jax.Array) -> None:
+        """Install a request's prefill KV. k/v: (L, KV, S, hd)."""
+        if rid in self.tables:
+            raise KeyError(f"rid {rid} already resident")
+        L, KV, S, hd = k.shape
+        need = self.blocks_needed(S)
+        if len(self.free) < need:
+            raise MemoryError(f"need {need} blocks, {len(self.free)} free")
+        blocks = [self.free.pop() for _ in range(need)]
+        bs = self.block_size
+        pad = need * bs - S
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        # (L, KV, need, bs, hd) -> per-block writes
+        kb = kp.reshape(L, KV, need, bs, hd).transpose(2, 0, 1, 3, 4)
+        vb = vp.reshape(L, KV, need, bs, hd).transpose(2, 0, 1, 3, 4)
+        idx = jnp.asarray(blocks)
+        self.k = self.k.at[:, idx].set(kb.transpose(1, 0, 2, 3, 4))
+        self.v = self.v.at[:, idx].set(vb.transpose(1, 0, 2, 3, 4))
+        self.tables[rid] = blocks
+        self.lengths[rid] = S
+
+    def append_token(self, rid: int, k: jax.Array, v: jax.Array) -> None:
+        """Append one token's KV. k/v: (L, KV, hd)."""
+        pos = self.lengths[rid]
+        blocks = self.tables[rid]
+        if pos >= len(blocks) * self.block_size:
+            if not self.free:
+                raise MemoryError("pool exhausted")
+            blocks.append(self.free.pop())
+        b = blocks[pos // self.block_size]
+        off = pos % self.block_size
+        self.k = self.k.at[:, b, :, off].set(k)
+        self.v = self.v.at[:, b, :, off].set(v)
+        self.lengths[rid] = pos + 1
+
+    def gather(self, rid: int):
+        """Contiguous (L, KV, S, hd) view for the attention kernels."""
+        blocks = jnp.asarray(self.tables[rid])
+        S = self.lengths[rid]
+        k = self.k[:, blocks]          # (L, n, KV, bs, hd)
+        v = self.v[:, blocks]
+        L, n, KV, bs, hd = k.shape
+        k = k.transpose(0, 2, 1, 3, 4).reshape(L, KV, n * bs, hd)[:, :, :S]
+        v = v.transpose(0, 2, 1, 3, 4).reshape(L, KV, n * bs, hd)[:, :, :S]
+        return k, v
+
+    def release(self, rid: int) -> None:
+        self.free.extend(self.tables.pop(rid))
+        self.lengths.pop(rid)
+
+    # ------------------------------------------------------------------
+    def utilization(self) -> float:
+        used_tokens = sum(self.lengths.values())
+        return used_tokens / (self.n_blocks * self.block_size)
+
+    def fragmentation(self) -> float:
+        """Internal fragmentation: allocated-but-unused slots / allocated."""
+        alloc = sum(len(b) for b in self.tables.values()) * self.block_size
+        if alloc == 0:
+            return 0.0
+        return 1.0 - sum(self.lengths.values()) / alloc

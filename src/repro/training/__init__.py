@@ -1,0 +1,4 @@
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+from repro.training.checkpoint import (load_checkpoint, restore_like,
+                                       save_checkpoint)
+from repro.training.data import SyntheticLMData

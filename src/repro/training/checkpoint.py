@@ -1,0 +1,48 @@
+"""Minimal checkpointing: params + optimizer state as .npz trees (no orbax
+offline). Paths keep the pytree structure via '/'-joined keys."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    out = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, params, opt_state, *, step: int) -> None:
+    d = Path(path)
+    d.mkdir(parents=True, exist_ok=True)
+    np.savez(d / "params.npz", **_flatten(params))
+    np.savez(d / "opt.npz", **_flatten(opt_state))
+    (d / "meta.json").write_text(json.dumps({"step": step}))
+
+
+def load_checkpoint(path: str) -> Tuple[dict, Any, int]:
+    """Returns (params_flat, opt_flat, step) — flat {path: array} mappings;
+    callers re-attach structure by matching an existing pytree if needed."""
+    d = Path(path)
+    params = dict(np.load(d / "params.npz"))
+    opt = dict(np.load(d / "opt.npz"))
+    step = json.loads((d / "meta.json").read_text())["step"]
+    return params, opt, step
+
+
+def restore_like(template, flat: dict):
+    """Rebuild a pytree with `template`'s structure from a flat mapping."""
+    leaves = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(template):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        leaves.append(jax.numpy.asarray(flat[key], leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)

@@ -1,0 +1,16 @@
+"""Test config. NOTE: no XLA_FLAGS here — smoke tests and benches must see
+ONE device (harness requirement); multi-device SP tests run in subprocesses
+(tests/multidevice/)."""
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,109 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (Simulator, TraceConfig, generate_trace, make_policy,
+                        paper_cluster)
+from repro.core.request import Phase
+from repro.kernels import ops, ref
+from repro.sp.common import finalize, merge_partials
+
+SET = dict(deadline=None, max_examples=20,
+           suppress_health_check=[HealthCheck.too_slow])
+
+
+def arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+@given(b=st.integers(1, 3), kv=st.sampled_from([1, 2, 4]),
+       rep=st.sampled_from([1, 2]), sq=st.integers(2, 24),
+       skx=st.integers(0, 24), d=st.sampled_from([4, 8]),
+       causal=st.booleans(), seed=st.integers(0, 2**31))
+@settings(**SET)
+def test_attention_oracle_vs_xla(b, kv, rep, sq, skx, d, causal, seed):
+    """Chunked XLA attention == naive oracle over random GQA shapes."""
+    rng = np.random.default_rng(seed)
+    h = kv * rep
+    sk = sq + skx
+    q, k, v = arr(rng, b, h, sq, d), arr(rng, b, kv, sk, d), arr(rng, b, kv, sk, d)
+    want = ref.mha_reference(q, k, v, causal=causal)
+    got = ops.xla_attention(q, k, v, causal=causal, q_block=8, kv_block=8)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+@given(split=st.integers(1, 31), seed=st.integers(0, 2**31))
+@settings(**SET)
+def test_lse_merge_split_invariance(split, seed):
+    """Attention over any KV split point, LSE-merged == full attention —
+    the algebraic core of ring attention."""
+    rng = np.random.default_rng(seed)
+    b, h, s, d = 1, 2, 32, 8
+    q, k, v = arr(rng, b, h, s, d), arr(rng, b, h, s, d), arr(rng, b, h, s, d)
+    o1, l1 = ops.xla_attention(q, k[:, :, :split], v[:, :, :split],
+                               causal=True, q_offset=0, return_lse=True)
+    o2, l2 = ops.xla_attention(q, k[:, :, split:], v[:, :, split:],
+                               causal=True, q_offset=-split, return_lse=True)
+    o, lse = merge_partials(o1.astype(jnp.float32), l1,
+                            o2.astype(jnp.float32), l2)
+    want = ref.mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(finalize(o, lse, jnp.float32), want, atol=3e-5)
+
+
+@given(chunk=st.sampled_from([4, 8, 16]), s=st.integers(5, 40),
+       seed=st.integers(0, 2**31))
+@settings(**SET)
+def test_ssd_chunked_equals_sequential(chunk, s, seed):
+    """Chunked SSD == sequential recurrence for any chunking."""
+    rng = np.random.default_rng(seed)
+    b, nh, hd, ns = 1, 2, 4, 8
+    x = arr(rng, b, s, nh, hd)
+    dt = jax.nn.softplus(arr(rng, b, s, nh))
+    A = -jnp.exp(arr(rng, nh))
+    B, C, D = arr(rng, b, s, ns), arr(rng, b, s, ns), arr(rng, nh)
+    want = ref.ssd_reference(x, dt, A, B, C, D)
+    got = ops.ssd_scan(x, dt, A, B, C, D, chunk=chunk, impl="xla")
+    np.testing.assert_allclose(got, want, atol=3e-3, rtol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 1000), n=st.integers(50, 300),
+       pol=st.sampled_from(["fifo", "priority", "pecsched", "pecsched/fsp"]))
+@settings(deadline=None, max_examples=15,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_scheduler_invariants_random_traces(seed, n, pol):
+    """Conservation + causality hold for every policy on random traces."""
+    cc, em = paper_cluster("mistral_7b")
+    tc = TraceConfig(n_requests=n, arrival_rps=20.0, seed=seed,
+                     long_low=30_000, long_high=100_000, long_quantile=0.97)
+    reqs = generate_trace(tc)
+    p = make_policy(pol, cc, em)
+    s = Simulator(p).run(copy.deepcopy(reqs))
+    starved = sum(1 for r in p.all_requests if r.phase == Phase.STARVED)
+    assert s["short_completed"] + s["long_completed"] + starved == n
+    for r in p.all_requests:
+        if r.prefill_start is not None:
+            assert r.prefill_start >= r.arrival - 1e-9
+        if r.finish is not None and r.prefill_start is not None:
+            assert r.finish >= r.prefill_start
+    assert 0.0 <= s["gpu_idle_rate"] <= 1.0
+
+
+@given(seed=st.integers(0, 1000))
+@settings(deadline=None, max_examples=15)
+def test_trace_generator_properties(seed):
+    tc = TraceConfig(n_requests=1000, seed=seed)
+    reqs = generate_trace(tc)
+    longs = [r for r in reqs if r.is_long]
+    assert len(longs) == round(1000 * 0.05)
+    assert all(tc.long_low <= r.input_len <= tc.long_high for r in longs)
+    assert all(1 <= r.output_len <= tc.output_max for r in reqs)
+    arr_t = [r.arrival for r in reqs]
+    assert all(b >= a for a, b in zip(arr_t, arr_t[1:]))

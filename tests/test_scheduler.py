@@ -1,0 +1,149 @@
+"""Cluster-scheduler tests: system invariants + directional paper claims on
+a small calibrated trace (full-scale claims run in benchmarks/)."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import (ClusterConfig, ExecutionModel, Phase, Simulator,
+                        TraceConfig, experiment_trace, generate_trace,
+                        make_policy, paper_cluster, trace_stats)
+
+POLICIES = ["fifo", "reservation", "priority", "pecsched", "pecsched/pe",
+            "pecsched/dis", "pecsched/col", "pecsched/fsp"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cc, em = paper_cluster("mistral_7b")
+    reqs, cap = experiment_trace(cc, em, n_requests=3000, seed=1)
+    return cc, em, reqs, cap
+
+
+@pytest.fixture(scope="module")
+def results(setup):
+    cc, em, reqs, _ = setup
+    out = {}
+    for pol in POLICIES + ["fifo_noshort"]:
+        p = make_policy(pol, cc, em)
+        out[pol] = (Simulator(p).run(copy.deepcopy(reqs)), p)
+    return out
+
+
+# ---------------- invariants -------------------------------------------------
+@pytest.mark.parametrize("pol", POLICIES)
+def test_conservation(results, pol):
+    """Every admitted request either completes or is explicitly starved."""
+    s, p = results[pol]
+    n = s["n_short"] + s["n_long"]
+    done = s["short_completed"] + s["long_completed"]
+    starved = sum(1 for r in p.all_requests if r.phase == Phase.STARVED)
+    assert done + starved == n, (pol, done, starved, n)
+
+
+@pytest.mark.parametrize("pol", POLICIES)
+def test_causality(results, pol):
+    s, p = results[pol]
+    for r in p.all_requests:
+        if r.prefill_start is not None:
+            assert r.prefill_start >= r.arrival - 1e-9
+        if r.finish is not None:
+            assert r.finish >= r.arrival
+            assert r.queueing_delay is not None and r.queueing_delay >= -1e-9
+
+
+def test_no_preemption_without_mechanism(results):
+    for pol in ("fifo", "reservation", "priority", "pecsched/pe"):
+        assert results[pol][0]["preemptions"] == 0, pol
+
+
+def test_preemption_counts_positive(results):
+    assert results["pecsched"][0]["preemptions"] > 0
+
+
+# ---------------- paper-claim directions -------------------------------------
+def test_fifo_hol_blocking(results):
+    """Fig.2: longs inflate short p99 queueing delay under FIFO."""
+    with_l = results["fifo"][0]["short_qd_pct"][99]
+    without = results["fifo_noshort"][0]["short_qd_pct"][99]
+    assert with_l > 2.0 * max(without, 1e-3)
+
+
+def test_reservation_idles_gpus(results):
+    """Table 1: reservation idles far more GPU time than FIFO."""
+    res = results["reservation"][0]["gpu_idle_rate"]
+    fifo = results["fifo"][0]["gpu_idle_rate"]
+    assert res > 1.5 * fifo and res > 0.1
+
+
+def test_priority_starves_longs(results):
+    """Table 2 direction: priority starves most longs in the live window."""
+    assert results["priority"][0]["long_starved_frac"] > 0.5
+
+
+def test_pecsched_protects_shorts(results):
+    """Fig.9/12: PecSched short p99 ~ Priority's, far below FIFO's."""
+    pec = results["pecsched"][0]["short_qd_pct"][99]
+    pri = results["priority"][0]["short_qd_pct"][99]
+    fifo = results["fifo"][0]["short_qd_pct"][99]
+    assert pec <= pri + 1.0
+    assert pec < 0.25 * fifo
+
+
+def test_pecsched_serves_longs(results):
+    """Fig.11: unlike Priority, PecSched starves no longs and bounds JCT."""
+    s = results["pecsched"][0]
+    assert s["long_starved_frac"] == 0.0
+    assert s["long_completed"] == s["n_long"]
+
+
+def test_ablation_pe_hurts_shorts(results):
+    """Fig.12: /PE (no preemption) inflates short p99 vs PecSched."""
+    assert results["pecsched/pe"][0]["short_qd_pct"][99] > \
+        results["pecsched"][0]["short_qd_pct"][99] + 0.5
+
+
+def test_ablation_fsp_hurts_long_jct_and_preempts_more(results):
+    """Fig.14/Table 6: ring-only SP raises long JCT and suspension count."""
+    pec = results["pecsched"][0]
+    fsp = results["pecsched/fsp"][0]
+    assert fsp["long_jct_mean"] > 1.2 * pec["long_jct_mean"]
+    assert fsp["preemptions"] > pec["preemptions"]
+
+
+def test_ablation_col_preempts_more(results):
+    """Table 6: preempting long decode (/CoL) raises suspensions."""
+    assert results["pecsched/col"][0]["preemptions"] >= \
+        results["pecsched"][0]["preemptions"]
+
+
+# ---------------- trace properties (seeded property-style) -------------------
+@pytest.mark.parametrize("seed", range(4))
+def test_trace_distribution_properties(seed):
+    tc = TraceConfig(n_requests=5000, seed=seed)
+    reqs = generate_trace(tc)
+    st = trace_stats(reqs)
+    assert 0.7 < st["frac_under_2k"] < 0.95        # paper: ~80% < 2K
+    assert abs(st["frac_long"] - 0.05) < 0.01
+    assert st["output_max"] <= 800
+    assert st["long_min"] >= tc.long_low and st["long_max"] <= tc.long_high
+    arr = [r.arrival for r in reqs]
+    assert all(b >= a for a, b in zip(arr, arr[1:]))  # monotone arrivals
+
+
+def test_replicas_needed_monotone():
+    cc, em = paper_cluster("llama31_70b")
+    rs = [em.replicas_needed(n) for n in (10_000, 100_000, 300_000, 500_000)]
+    assert all(b >= a for a, b in zip(rs, rs[1:]))
+    assert rs[0] >= 1
+
+
+def test_costmodel_scaling_properties():
+    cc, em = paper_cluster("mistral_7b")
+    # prefill superlinear in length (attention quadratic), decode memory-bound
+    assert em.prefill_time(200_000) > 2 * em.prefill_time(100_000)
+    assert em.prefill_time(100_000, 4) < em.prefill_time(100_000, 1)
+    assert em.decode_time_per_token(100_000) > em.decode_time_per_token(1_000)
+    # fast SP at least as fast as ring-only (the paper's core speedup)
+    assert em.prefill_time(300_000, 4, sp_mode="fastsp") < \
+        em.prefill_time(300_000, 4, sp_mode="ring")

@@ -1,0 +1,74 @@
+"""End-to-end behaviour tests for the reproduced system."""
+import copy
+import dataclasses
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, reduced_config
+from repro.core import Simulator, experiment_trace, make_policy, paper_cluster
+from repro.launch import steps as st
+
+
+def test_all_archs_registered():
+    assert len(ARCH_IDS) == 10
+    fams = {get_config(a).family for a in ARCH_IDS}
+    assert fams == {"dense", "moe", "ssm", "hybrid", "audio", "vlm"}
+
+
+def test_input_shapes_match_assignment():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)
+
+
+def test_long500k_support_matrix():
+    """DESIGN.md §Arch-applicability: exactly SSM/hybrid/SWA run long_500k."""
+    runners = {a for a in ARCH_IDS
+               if st.supports_shape(get_config(a), INPUT_SHAPES["long_500k"])[0]}
+    assert runners == {"mamba2_130m", "zamba2_2_7b", "llama3_8b"}
+
+
+def test_dryrun_artifacts_complete_and_green():
+    """Harness deliverable (e): every (arch x shape x mesh) combo lowered and
+    compiled (or documented SKIP) on both production meshes."""
+    art = Path(__file__).parent.parent / "benchmarks" / "artifacts" / "dryrun"
+    if not art.exists() or len(list(art.glob("*.json"))) < 80:
+        pytest.skip("dry-run artifacts not generated yet "
+                    "(python -m repro.launch.dryrun_all)")
+    import json
+    n_ok = n_skip = 0
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            for mesh in ("pod16x16", "pod2x16x16"):
+                f = art / f"{arch}.{shape}.{mesh}.json"
+                assert f.exists(), f"missing {f.name}"
+                rec = json.loads(f.read_text())
+                assert rec.get("ok") or rec.get("skipped"), f.name
+                n_ok += bool(rec.get("ok"))
+                n_skip += bool(rec.get("skipped"))
+    assert n_ok == 66 and n_skip == 14
+
+
+def test_simulator_end_to_end_all_policies():
+    cc, em = paper_cluster("mistral_7b")
+    reqs, _ = experiment_trace(cc, em, n_requests=800, seed=9)
+    for pol in ("fifo", "reservation", "priority", "pecsched"):
+        s = Simulator(make_policy(pol, cc, em)).run(copy.deepcopy(reqs))
+        assert s["short_completed"] > 0
+
+
+def test_mesh_shapes():
+    """make_production_mesh contract (checked in-process only for geometry;
+    real 256/512-device construction happens in the dry-run subprocesses)."""
+    src = (Path(__file__).parent.parent / "src" / "repro" / "launch" /
+           "mesh.py").read_text()
+    assert "(2, 16, 16)" in src and '("pod", "data", "model")' in src
+    assert "(16, 16)" in src and '("data", "model")' in src
