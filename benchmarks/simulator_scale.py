@@ -1,0 +1,82 @@
+"""Simulator-core scale benchmark: events/sec vs trace size and scenario.
+
+Replays growing traces through the slotted-heap event loop and reports
+throughput, so event-loop regressions show up as a number, not a feeling.
+The acceptance bar for the core is a 100 K-request `azure_default` replay
+under FIFO in well under 60 s on CPU.
+
+    PYTHONPATH=src python -m benchmarks.simulator_scale
+    PYTHONPATH=src python -m benchmarks.simulator_scale \
+        --sizes 10000,100000 --policies fifo,pecsched --scenario bursty --profile
+
+Prints ``name,us_per_call,derived`` CSV lines at the end (same contract as
+benchmarks/run.py) with events/sec as the derived value.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+from repro.core import (Simulator, format_profile, get_scenario, make_policy,
+                        paper_cluster)
+from repro.core.workload import calibrate_short_capacity
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="10000,30000,100000",
+                    help="comma-separated trace sizes")
+    ap.add_argument("--policies", default="fifo,pecsched")
+    ap.add_argument("--scenario", default="azure_default")
+    ap.add_argument("--model", default="mistral_7b")
+    ap.add_argument("--utilization", type=float, default=0.65,
+                    help="short load as a fraction of calibrated capacity")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--profile", action="store_true",
+                    help="print the full event-loop counter report per run")
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",")]
+    policies = args.policies.split(",")
+
+    cc, em = paper_cluster(args.model)
+    cap = calibrate_short_capacity(cc, em)
+    rps = cap * args.utilization
+    print(f"{args.model}: {cc.n_replicas} replicas, short capacity "
+          f"~{cap:.1f} rps -> replay at {rps:.1f} rps "
+          f"({args.scenario!r} scenario)")
+    print(f"{'policy':10s} {'n_req':>8s} {'events':>9s} {'wall_s':>7s} "
+          f"{'events/sec':>11s} {'done':>7s}")
+
+    csv_rows = []
+    for n in sizes:
+        reqs = get_scenario(args.scenario, n_requests=n, seed=args.seed,
+                            arrival_rps=rps)
+        for pol in policies:
+            p = make_policy(pol, cc, em)
+            sim = Simulator(p)
+            replay = copy.deepcopy(reqs)
+            t0 = time.perf_counter()
+            s = sim.run(replay)
+            wall = time.perf_counter() - t0
+            prof = sim.profile()
+            done = s["short_completed"] + s["long_completed"]
+            print(f"{pol:10s} {n:8d} {prof['events']:9d} {wall:7.2f} "
+                  f"{prof['events_per_sec']:11,.0f} {done:7d}")
+            if args.profile:
+                print(f"  {format_profile(prof)}")
+            csv_rows.append((f"simscale_{args.scenario}_{pol}_{n}",
+                             wall * 1e6 / max(prof["events"], 1),
+                             f"{prof['events_per_sec']:.0f}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

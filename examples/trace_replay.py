@@ -1,37 +1,92 @@
-"""Replay an Azure-style trace through the cluster simulator and print the
-paper's headline comparison (Figs. 9-11) for one model.
+"""Replay a workload through the cluster simulator and print the paper's
+headline comparison (Figs. 9-11) for one model.
+
+By default this replays the paper's calibrated §6.2 experiment trace; any
+named scenario from the registry (azure_default, bursty, diurnal,
+heavy_tail, multi_tenant, chat_multiturn) or a real Azure-trace-format CSV
+can be swept across the same policy matrix:
 
     PYTHONPATH=src python examples/trace_replay.py [--model mistral_7b]
+    PYTHONPATH=src python examples/trace_replay.py --scenario bursty
+    PYTHONPATH=src python examples/trace_replay.py --trace-csv my_trace.csv
+    PYTHONPATH=src python examples/trace_replay.py --list-scenarios
 """
 import argparse
 import copy
 
-from repro.core import Simulator, experiment_trace, make_policy, paper_cluster
-from repro.core.workload import PAPER_SETUPS
+from repro.core import (Simulator, experiment_trace, format_profile,
+                        get_scenario, list_scenarios, load_trace_csv,
+                        make_policy, paper_cluster)
+from repro.core.workload import PAPER_SETUPS, calibrate_short_capacity
+
+POLICIES = ("fifo", "reservation", "priority", "pecsched",
+            "pecsched/pe", "pecsched/fsp")
+
+
+def build_requests(args, cc, em):
+    """(requests, capacity_rps) for the chosen source: paper experiment
+    trace (default), a named scenario at calibrated load, or a CSV file."""
+    if args.trace_csv:
+        cap = calibrate_short_capacity(cc, em)
+        # whole file unless the user explicitly capped it with --n
+        return load_trace_csv(args.trace_csv, max_requests=args.n), cap
+    if args.scenario:
+        cap = calibrate_short_capacity(cc, em)
+        reqs = get_scenario(args.scenario, n_requests=args.n, seed=args.seed,
+                            arrival_rps=cap * args.utilization)
+        return reqs, cap
+    reqs, cap = experiment_trace(cc, em, n_requests=args.n, seed=args.seed,
+                                 utilization=args.utilization)
+    return reqs, cap
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="mistral_7b",
                     choices=list(PAPER_SETUPS))
-    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--n", type=int, default=None,
+                    help="trace size (default 8000 synthetic; --trace-csv "
+                         "replays the whole file unless capped)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", default=None,
+                    help="named scenario from the registry (default: the "
+                         "paper's calibrated experiment trace)")
+    ap.add_argument("--trace-csv", default=None,
+                    help="replay a real Azure-trace-format CSV file")
+    ap.add_argument("--utilization", type=float, default=0.65,
+                    help="short load as a fraction of calibrated capacity")
+    ap.add_argument("--profile", action="store_true",
+                    help="print event-loop counters per policy")
+    ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
 
+    if args.list_scenarios:
+        for name, desc in list_scenarios().items():
+            print(f"{name:15s} {desc}")
+        return
+
+    if args.scenario == "csv" and not args.trace_csv:
+        ap.error("the 'csv' scenario needs a file: use --trace-csv PATH")
+    if args.n is None and not args.trace_csv:
+        args.n = 8000
     cc, em = paper_cluster(args.model)
-    reqs, cap = experiment_trace(cc, em, n_requests=args.n, seed=0)
+    reqs, cap = build_requests(args, cc, em)
     n_long = sum(r.is_long for r in reqs)
+    src = args.trace_csv or args.scenario or "paper experiment trace"
     print(f"{args.model}: {cc.n_replicas} replicas (TP={cc.tp}), "
-          f"short capacity ~{cap:.0f} rps, trace {args.n} requests "
+          f"short capacity ~{cap:.0f} rps, {src}: {len(reqs)} requests "
           f"({n_long} long)")
     print(f"{'policy':14s} {'qd_p50':>8s} {'qd_p99':>9s} {'rps':>6s} "
           f"{'longJCT':>8s} {'starved':>8s} {'preempt':>8s}")
-    for pol in ("fifo", "reservation", "priority", "pecsched",
-                "pecsched/pe", "pecsched/fsp"):
-        s = Simulator(make_policy(pol, cc, em)).run(copy.deepcopy(reqs))
+    for pol in POLICIES:
+        sim = Simulator(make_policy(pol, cc, em))
+        s = sim.run(copy.deepcopy(reqs))
         print(f"{pol:14s} {s['short_qd_pct'][50]:8.3f} "
               f"{s['short_qd_pct'][99]:9.2f} {s['short_rps']:6.1f} "
               f"{(s['long_jct_mean'] or float('nan')):8.1f} "
               f"{s['long_starved_frac']:8.2f} {s['preemptions']:8d}")
+        if args.profile:
+            print(f"  {format_profile(sim.profile())}")
     print("\npaper claims: PecSched ~= Priority for shorts, 58-92% p99 cut "
           "vs FIFO/Reservation, longs never starved, modest JCT cost.")
 

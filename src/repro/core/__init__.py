@@ -1,11 +1,14 @@
+from repro.core.arrivals import ARRIVAL_PROCESSES, make_arrivals
 from repro.core.cluster import ClusterConfig, build_replicas
 from repro.core.costmodel import ExecutionModel, ReplicaSpec
 from repro.core.metrics import summarize
 from repro.core.request import Phase, Request
+from repro.core.scenarios import SCENARIOS, get_scenario, list_scenarios
 from repro.core.schedulers import (BasePolicy, FIFOPolicy, PecSchedPolicy,
                                    PriorityPolicy, ReservationPolicy,
                                    make_policy)
-from repro.core.simulator import Simulator, Work
-from repro.core.trace import TraceConfig, generate_trace, trace_stats
+from repro.core.simulator import EventHeap, Simulator, Work, format_profile
+from repro.core.trace import (TraceConfig, generate_trace, load_trace_csv,
+                              save_trace_csv, trace_stats)
 from repro.core.workload import (calibrate_short_capacity, experiment_trace,
                                  paper_cluster)

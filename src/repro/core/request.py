@@ -23,6 +23,8 @@ class Request:
     input_len: int
     output_len: int            # ground truth — NOT visible to the scheduler
     is_long: bool = False
+    tenant: Optional[str] = None   # multi-tenant scenarios: originating tenant
+    session: Optional[int] = None  # chat scenarios: multi-turn session id
 
     # --- runtime bookkeeping (simulator-owned) ---
     phase: Phase = Phase.QUEUED

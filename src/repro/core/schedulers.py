@@ -1,5 +1,30 @@
 """Cluster scheduling policies: FIFO, Reservation, Priority (the paper's §2.1
-baselines) and PecSched (§5) with its ablations /PE /Dis /CoL /FSP (§6.4)."""
+baselines) and PecSched (§5) with its ablations /PE /Dis /CoL /FSP (§6.4).
+
+Policy classes vs the paper's sections and artifacts:
+
+================== ======================= ===============================
+class / variant     paper section           figure / table it reproduces
+================== ======================= ===============================
+FIFOPolicy          §2.1 (vLLM-style)       Fig.2 (HOL blocking), Figs.9-11
+                                            baselines
+FIFOPolicy          §3.2 "without longs"    Fig.2 no-long comparison arm
+ (admit_long=False)
+ReservationPolicy   §2.1 (Llumnix-style)    Table 1 (idle rate), Fig.3
+PriorityPolicy      §2.1 (Past-Future)      Table 2 (long starvation)
+PecSchedPolicy      §5 (full system)        Figs.9-11 (overall), Table 6/7
+ pecsched/pe        §6.4 no preemption      Fig.12 ablation
+ pecsched/dis       §6.4 no disaggregation  Fig.13 ablation
+ pecsched/col       §6.4 no colocation      Table 6 ablation
+ pecsched/fsp       §6.4 ring-only SP       Fig.14 + Table 3/6 ablation
+================== ======================= ===============================
+
+Dispatch contract with the simulator: the simulator applies every event at a
+timestamp (policy.on_arrival / policy.on_done), then calls policy.dispatch(t)
+ONCE for that timestamp. Policies start work via `_start` (which pushes the
+DONE event) and revoke in-flight work via `self.sim.cancel(work)` — O(1)
+removal from the event heap, no dead Work lingering until its timestamp.
+"""
 from __future__ import annotations
 
 import itertools
@@ -427,7 +452,7 @@ class PecSchedPolicy(BasePolicy):
             rep = self.replicas[rid]
             w = rep.work
             if w is not None and not w.canceled:
-                w.canceled = True
+                self.sim.cancel(w)
                 elapsed = t - w.start
                 if w.kind == "long_prefill":
                     st.remaining = max(w.duration - elapsed, 0.0)

@@ -8,19 +8,111 @@ the dry-run roofline analysis uses, so simulator and compiled-artifact
 analysis share one source of truth.
 
 Event kinds: ARRIVAL(request), DONE(work). Policies expose on_event hooks and
-a dispatch() pass that runs after every event.
+a dispatch() pass.
+
+The event loop is built for 100 K+-request traces:
+
+* **Slotted heap** (`EventHeap`): the binary heap orders distinct
+  timestamps only; each timestamp owns an ordered slot of events. Pushing
+  a second event at an existing time is a dict append, not a heap sift.
+* **Cheap cancellation**: `Simulator.cancel(work)` nulls the pending DONE
+  entry in O(1) — the dead `Work` (and the Request lists it holds) is
+  garbage-collectable immediately instead of lingering in the heap until
+  its timestamp pops.
+* **Batched same-timestamp dispatch**: all events at one timestamp are
+  applied before a single `policy.dispatch()` pass, so simultaneous
+  completions trigger one placement scan, not one per event.
+* **Profile counters**: `Simulator.profile()` reports events, pushes,
+  cancels, dispatch passes, peak heap size, wall/policy time and events/sec
+  (surfaced by `benchmarks/simulator_scale.py --profile` and
+  `examples/trace_replay.py --profile`).
 """
 from __future__ import annotations
 
 import heapq
-import itertools
 import time as _time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Tuple
 
-from repro.core.cluster import ClusterConfig, ReplicaState, build_replicas
-from repro.core.costmodel import ExecutionModel
-from repro.core.request import Phase, Request
+from repro.core.request import Request
+
+# heap entry: a mutable [kind, payload, popped] triple; cancellation nulls
+# the payload in place (payload None == dead entry, skipped on pop), and
+# pop_batch marks entries popped so a late cancel() can't corrupt counters
+Entry = list
+
+
+class EventHeap:
+    """Timestamp-slotted event heap with O(1) cancellation.
+
+    `_times` is a heap of distinct timestamps; `_slots[t]` is the ordered
+    list of entries scheduled at `t` (push order == dispatch order, so the
+    old (t, seq) tie-break semantics are preserved within a slot).
+    """
+
+    def __init__(self):
+        self._times: List[float] = []
+        self._slots: Dict[float, List[Entry]] = {}
+        self.n_live = 0
+        self.n_pushed = 0
+        self.n_canceled = 0
+        self.peak_slots = 0
+
+    def __len__(self) -> int:
+        return self.n_live
+
+    def push(self, t: float, kind: str, payload) -> Entry:
+        entry: Entry = [kind, payload, False]
+        slot = self._slots.get(t)
+        if slot is None:
+            self._slots[t] = [entry]
+            heapq.heappush(self._times, t)
+        else:
+            slot.append(entry)
+        self.n_live += 1
+        self.n_pushed += 1
+        if len(self._slots) > self.peak_slots:
+            self.peak_slots = len(self._slots)
+        return entry
+
+    def load(self, items: Iterable[Tuple[float, str, object]]) -> None:
+        """Bulk-load (t, kind, payload) triples; heapifies once instead of
+        sifting per push — the fast path for seeding a trace's arrivals."""
+        for t, kind, payload in items:
+            entry: Entry = [kind, payload, False]
+            slot = self._slots.get(t)
+            if slot is None:
+                self._slots[t] = [entry]
+            else:
+                slot.append(entry)
+            self.n_live += 1
+            self.n_pushed += 1
+        self._times = list(self._slots.keys())
+        heapq.heapify(self._times)
+        if len(self._slots) > self.peak_slots:
+            self.peak_slots = len(self._slots)
+
+    def cancel(self, entry: Entry) -> bool:
+        if entry[1] is None or entry[2]:     # dead, or already dispatched
+            return False
+        entry[0] = "CANCELED"
+        entry[1] = None
+        self.n_live -= 1
+        self.n_canceled += 1
+        return True
+
+    def pop_batch(self) -> Optional[Tuple[float, List[Entry]]]:
+        """Pop ALL events at the earliest live timestamp."""
+        while self._times:
+            t = heapq.heappop(self._times)
+            slot = self._slots.pop(t)
+            live = [e for e in slot if e[1] is not None]
+            if live:
+                for e in live:
+                    e[2] = True
+                self.n_live -= len(live)
+                return t, live
+        return None
 
 
 @dataclass
@@ -43,35 +135,87 @@ class Work:
 class Simulator:
     def __init__(self, policy: "BasePolicy"):
         self.policy = policy
-        self.heap: List = []
-        self._seq = itertools.count()
+        self.heap = EventHeap()
+        self._work_entries: Dict[int, Entry] = {}   # wid -> pending DONE entry
         self.now = 0.0
         self.sched_time = 0.0           # wall-clock spent in policy decisions
-        self.n_dispatches = 0
+        self.run_time = 0.0             # wall-clock of the whole run()
+        self.n_dispatches = 0           # dispatch passes (== event batches)
+        self.n_events = 0               # events applied (arrivals + dones)
+        self.last_arrival = 0.0
 
-    def push(self, t: float, kind: str, payload) -> None:
-        heapq.heappush(self.heap, (t, next(self._seq), kind, payload))
+    # ------------------------------------------------------------------
+    def push(self, t: float, kind: str, payload) -> Entry:
+        entry = self.heap.push(t, kind, payload)
+        if kind == "DONE":
+            self._work_entries[payload.wid] = entry
+        return entry
 
+    def cancel(self, work: Work) -> bool:
+        """Cancel a pending DONE. O(1); the dead entry never dispatches and
+        drops its payload reference immediately."""
+        work.canceled = True
+        entry = self._work_entries.pop(work.wid, None)
+        return self.heap.cancel(entry) if entry is not None else False
+
+    # ------------------------------------------------------------------
     def run(self, requests: List[Request], *, horizon: Optional[float] = None
             ) -> Dict:
+        wall0 = _time.perf_counter()
         self.last_arrival = max(r.arrival for r in requests) if requests else 0.0
-        for r in requests:
-            self.push(r.arrival, "ARRIVAL", r)
+        self.heap.load((r.arrival, "ARRIVAL", r) for r in requests)
         self.policy.bind(self)
-        while self.heap:
-            t, _, kind, payload = heapq.heappop(self.heap)
+        on_arrival, on_done = self.policy.on_arrival, self.policy.on_done
+        dispatch = self.policy.dispatch
+        while True:
+            batch = self.heap.pop_batch()
+            if batch is None:
+                break
+            t, entries = batch
             if horizon is not None and t > horizon:
                 break
             self.now = t
             t0 = _time.perf_counter()
-            if kind == "ARRIVAL":
-                self.policy.on_arrival(t, payload)
-            elif kind == "DONE":
-                if payload.canceled:
+            for entry in entries:
+                kind, payload = entry[0], entry[1]
+                if payload is None:         # canceled mid-batch (legacy path)
                     continue
-                self.policy.on_done(t, payload)
-            self.policy.dispatch(t)
+                if kind == "ARRIVAL":
+                    on_arrival(t, payload)
+                else:
+                    self._work_entries.pop(payload.wid, None)
+                    if payload.canceled:    # legacy flag-only cancellation
+                        continue
+                    on_done(t, payload)
+                self.n_events += 1
+            dispatch(t)
             self.sched_time += _time.perf_counter() - t0
             self.n_dispatches += 1
         self.policy.finalize(self.now)
+        self.run_time = _time.perf_counter() - wall0
         return self.policy.summary(self.now)
+
+    # ------------------------------------------------------------------
+    def profile(self) -> Dict:
+        """Event-loop counter report (cheap ints, always collected)."""
+        return {
+            "events": self.n_events,
+            "pushes": self.heap.n_pushed,
+            "cancels": self.heap.n_canceled,
+            "dispatch_passes": self.n_dispatches,
+            "events_per_dispatch": self.n_events / max(self.n_dispatches, 1),
+            "peak_heap_slots": self.heap.peak_slots,
+            "wall_s": self.run_time,
+            "policy_s": self.sched_time,
+            "loop_s": self.run_time - self.sched_time,
+            "events_per_sec": self.n_events / max(self.run_time, 1e-9),
+        }
+
+
+def format_profile(p: Dict) -> str:
+    return ("events={events} pushes={pushes} cancels={cancels} "
+            "dispatch_passes={dispatch_passes} "
+            "events/dispatch={events_per_dispatch:.2f} "
+            "peak_heap_slots={peak_heap_slots} wall={wall_s:.2f}s "
+            "(policy {policy_s:.2f}s / loop {loop_s:.2f}s) "
+            "events/sec={events_per_sec:,.0f}".format(**p))

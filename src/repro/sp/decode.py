@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels import ops
+from repro.sp.common import shard_map
 
 
 def distributed_decode_local(q, k, v, cache_len, *, seq_axes,
@@ -79,7 +80,7 @@ def distributed_decode_attention(q, k, v, cache_len, *, mesh: Mesh,
     seq = axes if len(axes) > 1 else axes[0]
     fn = functools.partial(distributed_decode_local, seq_axes=axes,
                            sliding_window=sliding_window)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(P(bspec, None, None), P(bspec, None, seq, None),
                   P(bspec, None, seq, None), P(bspec)),

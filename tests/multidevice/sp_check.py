@@ -7,6 +7,7 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels import ref
 from repro.sp import (fast_sp_attention, distributed_decode_attention,
                       ring_attention_local)
+from repro.sp.common import shard_map
 
 rng = np.random.default_rng(3)
 def t(*s): return jnp.asarray(rng.normal(size=s), jnp.float32)
@@ -17,7 +18,7 @@ b,h,kv,S,d = 2,4,2,64,16
 q,k,v = t(b,h,S,d), t(b,kv,S,d), t(b,kv,S,d)
 want = ref.mha_reference(q,k,v,causal=True)
 fn = functools.partial(ring_attention_local, axis_name="data", causal=True)
-got = jax.jit(jax.shard_map(fn, mesh=mesh,
+got = jax.jit(shard_map(fn, mesh=mesh,
     in_specs=(P(None,None,"data",None),)*3, out_specs=P(None,None,"data",None), check_vma=False))(q,k,v)
 print("ring err", float(jnp.abs(want-got).max()))
 assert jnp.abs(want-got).max() < 2e-5

@@ -5,6 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dep: pip install -r requirements-dev.txt")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
