@@ -1,74 +1,151 @@
-"""End-to-end serving driver (deliverable b): a small model served with
-batched requests on a real-execution mini cluster, PecSched vs FIFO.
+"""End-to-end serving driver: ANY scheduling policy x ANY workload scenario
+on a real-execution mini cluster.
 
-Every prefill/decode runs actual JAX compute; PecSched's layer-granular
-preemption, KV migration to the decode engine, and resume are all exercised
-for real. Virtual time = measured compute time, so the metrics reflect the
-scheduling dynamics rather than Python overhead.
+The scheduling brain is the same `make_policy` stack the analytic simulator
+runs (all nine names: fifo, fifo_noshort, reservation, priority, pecsched
+and its /PE /Dis /CoL /FSP ablations); execution is real JAX compute on
+`ReplicaEngine`s via the EngineBackend — layer-granular preemptible prefill,
+KV migration to the dedicated decode engine, slot-chunked decode.  Virtual
+time advances by measured compute (--clock measured, default) or by the
+cost-model estimate (--clock analytic, the cross-backend parity mode).
 
-    PYTHONPATH=src python examples/serve_cluster.py [--n 24]
+    PYTHONPATH=src python examples/serve_cluster.py                  # compare
+    PYTHONPATH=src python examples/serve_cluster.py --policy pecsched \
+        --scenario bursty --smoke                                    # CI smoke
+    PYTHONPATH=src python examples/serve_cluster.py --policy all \
+        --scenario heavy_tail --n 32 --compare-sim
+
+Scenario traces carry cluster-scale token counts; the backend maps them to
+engine-sized prompts (log-scaled, bucketed) so every `get_scenario` workload
+runs end-to-end on CPU engines.
 """
 import argparse
+import copy
 import dataclasses
+import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, reduced_config
+from repro.core import (POLICY_NAMES, ClusterConfig, ExecutionModel,
+                        Simulator, get_scenario, list_scenarios, make_policy)
+from repro.core.request import Request
 from repro.models import init_params
-from repro.serving.cluster import MiniCluster, ServeRequest
+from repro.serving.backend import EngineBackend
 
 
-def make_requests(cfg, n, seed=0, long_every=6, rps=40.0):
-    rng = np.random.default_rng(seed)
-    reqs, t = [], 0.0
-    for i in range(n):
-        t += float(rng.exponential(1.0 / rps))
-        is_long = (i % long_every == long_every - 1)
-        slen = 96 if is_long else int(rng.integers(8, 24))
-        reqs.append(ServeRequest(
-            rid=i, arrival=t, max_new=4, is_long=is_long,
-            tokens=rng.integers(0, cfg.vocab_size, slen).astype(np.int32)))
-    return reqs
+def calibrate_rps(backend: EngineBackend, n_general: int,
+                  utilization: float) -> float:
+    """Measure one short prefill+decode and size the arrival rate so the
+    general engines run at `utilization` x their short-service capacity
+    (the engine-world analogue of workload.calibrate_short_capacity)."""
+    eng = backend._engine(0)
+    dt = 0.0
+    for i, measure in ((-1, False), (-2, True)):    # first pass pays the jits
+        warm = Request(rid=i, arrival=0.0, input_len=1000, output_len=4)
+        d = backend._complete_prefill(eng, warm)
+        d += backend._decode_batch(eng, [warm])
+        if measure:
+            dt = d
+    backend.reset()
+    return utilization * n_general / max(dt, 1e-6)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="pecsched,fifo",
+                    help="comma-separated make_policy names, or 'all'")
+    ap.add_argument("--scenario", default="azure_default")
+    ap.add_argument("--list-scenarios", action="store_true")
     ap.add_argument("--n", type=int, default=24)
-    ap.add_argument("--engines", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engines", type=int, default=2,
+                    help="general engines (one more is added as the "
+                         "PecSched decode pool / extra baseline capacity)")
+    ap.add_argument("--clock", choices=("measured", "analytic"),
+                    default="measured")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--utilization", type=float, default=1.2,
+                    help="arrival rate as a fraction of measured short "
+                         "capacity (>1 forces queueing/preemption)")
+    ap.add_argument("--trace-csv", default=None,
+                    help="path for --scenario csv")
+    ap.add_argument("--compare-sim", action="store_true",
+                    help="also replay the trace through the analytic "
+                         "SimBackend and print both")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration (overrides --n)")
     args = ap.parse_args()
 
+    if args.list_scenarios:
+        for name, desc in list_scenarios().items():
+            print(f"{name:15s} {desc}")
+        return
+    if args.smoke:
+        args.n = min(args.n, 10)
+    policies = POLICY_NAMES if args.policy == "all" \
+        else tuple(args.policy.split(","))
+
     cfg = dataclasses.replace(
-        reduced_config(get_config("mistral_7b"), layers=4),
+        reduced_config(get_config("mistral_7b"), layers=args.layers),
         dtype="float32", sliding_window=0)
     params = init_params(jax.random.PRNGKey(0), cfg)
+    # one extra replica: PecSched dedicates it to decode, the baselines get
+    # it back as general capacity — total engine count is equal either way
+    cc = ClusterConfig(n_nodes=1, gpus_per_node=args.engines + 1, tp=1,
+                       n_short_decode_replicas=1, max_decode_concurrency=8)
+    em = ExecutionModel(cfg, cc.replica_spec())
+    backend = EngineBackend(cfg, params, max_len=args.max_len,
+                            layers_per_quantum=1, clock=args.clock,
+                            max_new_cap=args.max_new, seed=args.seed)
 
-    print(f"mini cluster: {args.engines} engines, model {cfg.name}, "
-          f"{args.n} requests (1 in 6 long)")
-    for policy in ("pecsched", "fifo"):
-        mc = MiniCluster(cfg, params, n_engines=args.engines, policy=policy,
-                         max_len=128, layers_per_quantum=1)
-        # warm up jits so virtual time reflects steady-state compute
-        warm = ServeRequest(rid=-1, arrival=0.0, max_new=1,
-                            tokens=np.zeros(16, np.int32))
-        mc.submit(warm)
-        mc.run()
-        mc.done.clear()
-        for e in mc.engines:
-            e.vtime = 0.0
-        if mc.decode_engine:
-            mc.decode_engine.vtime = 0.0
-        for r in make_requests(cfg, args.n):
-            mc.submit(r)
-        mc.run()
-        m = mc.metrics()
-        print(f"  {policy:9s} done={m['short_done']}+{m['long_done']}L "
-              f"short qd mean={m['short_qd_mean']*1e3:7.1f}ms "
-              f"p99={m['short_qd_p99']*1e3:7.1f}ms "
-              f"long JCT={m['long_jct_mean']*1e3:7.1f}ms "
-              f"preemptions={m['preemptions']}")
-    print("expected: pecsched cuts short queueing delay vs fifo; long JCT "
-          "rises only modestly (the paper's headline trade-off)")
+    rps = calibrate_rps(backend, args.engines, args.utilization)
+    kw = {"path": args.trace_csv} if args.scenario == "csv" else {}
+    reqs = get_scenario(args.scenario, n_requests=args.n, seed=args.seed,
+                        arrival_rps=rps, **kw)
+    n_long = sum(r.is_long for r in reqs)
+    if not args.smoke:
+        # pre-compile every prompt shape on every engine so measured time is
+        # steady-state compute, not first-policy compilation
+        backend.warmup({backend.prompt_len(r) for r in reqs},
+                       range(args.engines + 1))
+    print(f"mini cluster: {args.engines}+1 engines, model {cfg.name}, "
+          f"scenario {args.scenario!r}: {len(reqs)} requests ({n_long} long) "
+          f"at {rps:.0f} rps, clock={args.clock}")
+    hdr = (f"{'policy':14s} {'done':>7s} {'qd_mean':>9s} {'qd_p99':>9s} "
+           f"{'longJCT':>9s} {'preempt':>7s} {'starved':>7s} "
+           f"{'compute':>8s} {'wall':>6s}")
+    print(hdr)
+    for pol_name in policies:
+        backend.reset()
+        pol = make_policy(pol_name, cc, em)
+        t0 = time.perf_counter()
+        s = Simulator(pol, backend=backend).run(copy.deepcopy(reqs))
+        wall = time.perf_counter() - t0
+        def ms(v):
+            return (v if v is not None else float("nan")) * 1e3
+        print(f"{pol_name:14s} {s['short_completed']:4d}+{s['long_completed']:d}L "
+              f"{ms(s['short_qd_mean']):8.1f}m "
+              f"{ms(s['short_qd_pct'][99]):8.1f}m "
+              f"{ms(s['long_jct_mean']):8.1f}m "
+              f"{s['preemptions']:7d} {s['long_starved_frac']:7.2f} "
+              f"{backend.measured_s:7.2f}s {wall:5.1f}s")
+        if args.compare_sim:
+            ps = make_policy(pol_name, cc, em)
+            ss = Simulator(ps).run(copy.deepcopy(reqs))
+            print(f"  {'(sim)':12s} {ss['short_completed']:4d}+"
+                  f"{ss['long_completed']:d}L "
+                  f"{ms(ss['short_qd_mean']):8.1f}m "
+                  f"{ms(ss['short_qd_pct'][99]):8.1f}m "
+                  f"{ms(ss['long_jct_mean']):8.1f}m "
+                  f"{ss['preemptions']:7d} {ss['long_starved_frac']:7.2f}")
+    if args.smoke:
+        print("SMOKE OK")
+    else:
+        print("\nexpected: pecsched cuts short queueing delay vs fifo; long "
+              "JCT rises only modestly (the paper's headline trade-off)")
 
 
 if __name__ == "__main__":

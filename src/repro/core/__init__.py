@@ -1,12 +1,13 @@
 from repro.core.arrivals import ARRIVAL_PROCESSES, make_arrivals
+from repro.core.backend import ExecutionBackend, SimBackend
 from repro.core.cluster import ClusterConfig, build_replicas
 from repro.core.costmodel import ExecutionModel, ReplicaSpec
 from repro.core.metrics import summarize
 from repro.core.request import Phase, Request
 from repro.core.scenarios import SCENARIOS, get_scenario, list_scenarios
-from repro.core.schedulers import (BasePolicy, FIFOPolicy, PecSchedPolicy,
-                                   PriorityPolicy, ReservationPolicy,
-                                   make_policy)
+from repro.core.schedulers import (POLICY_NAMES, BasePolicy, FIFOPolicy,
+                                   PecSchedPolicy, PriorityPolicy,
+                                   ReservationPolicy, make_policy)
 from repro.core.simulator import EventHeap, Simulator, Work, format_profile
 from repro.core.trace import (TraceConfig, generate_trace, load_trace_csv,
                               save_trace_csv, trace_stats)

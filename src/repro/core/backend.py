@@ -1,0 +1,79 @@
+"""Execution backends: one scheduling brain, two execution worlds.
+
+Policies (core/schedulers.py) never execute anything themselves — they issue
+abstract commands against an `ExecutionBackend`:
+
+    backend.submit(work)   start a unit of Work; the backend decides when
+                           (and, for real engines, how) it completes
+    backend.cancel(work)   revoke an in-flight Work (preemption §5.1)
+
+and they learn about the world only through the event hooks the shared
+`Simulator` driver calls (`on_arrival`, `on_done`, `dispatch`).  Two
+backends implement the protocol:
+
+* `SimBackend` (here): the analytic world.  A Work's completion is
+  scheduled at ``start + duration`` where ``duration`` is the policy's
+  roofline estimate (costmodel.ExecutionModel).  This is the original
+  discrete-event simulator behaviour, preserved verbatim — it carries the
+  100 K-request benchmark and every paper-claim test.
+
+* `EngineBackend` (repro/serving/backend.py): the real world.  Each
+  replica id maps to a `ReplicaEngine` running genuine JAX compute;
+  prefill runs layer-granular quanta (preemptible, §5.1), short KV
+  migrates to the decode replica via `admit` (§5.2), and the virtual
+  clock advances by *measured* compute time.  It also offers an
+  ``analytic`` clock mode that keeps the Sim timeline (so decisions are
+  bit-identical across backends — the parity harness in
+  tests/test_backends.py relies on this) while still executing every
+  command on real engines.
+
+The split means every `make_policy` name and every `get_scenario` workload
+runs on both worlds with zero per-policy glue.
+"""
+from __future__ import annotations
+
+
+class ExecutionBackend:
+    """Protocol base.  A backend owns the *execution* semantics of Work;
+    the Simulator owns the event loop; the policy owns the decisions."""
+
+    #: True if the driver must call `finish(t, work)` right before the
+    #: policy's on_done (backends that execute lazily at completion time).
+    needs_finish = False
+
+    def bind(self, sim) -> None:
+        self.sim = sim
+
+    # -- commands issued by policies -----------------------------------
+    def submit(self, work) -> None:
+        """Schedule `work`; the backend decides its completion time."""
+        raise NotImplementedError
+
+    def cancel(self, work) -> bool:
+        """Revoke a pending completion (preemption). O(1)."""
+        return self.sim.cancel(work)
+
+    def decode_inline(self, work) -> None:
+        """The policy finished `work`'s requests with decode modeled inline
+        (the /Dis colocated path) — no separate decode Work will follow.
+        Analytic backends need no action; real backends run the decode now
+        so generations complete and parked KV is released."""
+
+    # -- driver hooks ---------------------------------------------------
+    def on_event(self, t: float, kind: str, payload) -> None:
+        """Handle a backend-internal event kind (e.g. an engine quantum)."""
+        raise ValueError(f"backend got unknown event kind {kind!r}")
+
+    def finish(self, t: float, work) -> None:
+        """Called before policy.on_done when `needs_finish` is True."""
+
+    def reset(self) -> None:
+        """Clear per-run state so the backend can drive a fresh policy."""
+
+
+class SimBackend(ExecutionBackend):
+    """Analytic execution: completion fires at ``start + duration`` where
+    duration is the policy's cost-model estimate.  No real compute."""
+
+    def submit(self, work) -> None:
+        self.sim.push(work.start + work.duration, "DONE", work)

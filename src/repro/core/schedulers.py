@@ -19,11 +19,18 @@ PecSchedPolicy      §5 (full system)        Figs.9-11 (overall), Table 6/7
  pecsched/fsp       §6.4 ring-only SP       Fig.14 + Table 3/6 ablation
 ================== ======================= ===============================
 
-Dispatch contract with the simulator: the simulator applies every event at a
+Dispatch contract with the driver: the Simulator applies every event at a
 timestamp (policy.on_arrival / policy.on_done), then calls policy.dispatch(t)
-ONCE for that timestamp. Policies start work via `_start` (which pushes the
-DONE event) and revoke in-flight work via `self.sim.cancel(work)` — O(1)
-removal from the event heap, no dead Work lingering until its timestamp.
+ONCE for that timestamp. Policies start work via `_start` (which submits the
+Work to the bound ExecutionBackend) and revoke in-flight work via
+`self.backend.cancel(work)` — O(1) removal from the event heap, no dead Work
+lingering until its timestamp.
+
+Policies never execute anything and never push events themselves: the
+backend decides when (SimBackend: at the analytic `duration`) and how
+(EngineBackend: real JAX engines, measured compute) a Work completes.  The
+same policy object therefore drives both the 100 K-request analytic sweeps
+and the real-engine mini cluster, unmodified.
 """
 from __future__ import annotations
 
@@ -49,14 +56,21 @@ class BasePolicy:
         self.replicas = build_replicas(cc, dedicated_decode=dedicated_decode)
         self._wid = itertools.count()
         self.sim = None
+        self.backend = None
         self.done_requests: List[Request] = []
         self.all_requests: List[Request] = []
         self.preemption_events = 0          # total suspensions (paper Table 3/6)
         self.per_request_sched: Dict[int, float] = {}
+        # cross-backend parity harness: when enabled, every placement and
+        # preemption decision is appended as a tuple so two backends' runs
+        # can be compared event-for-event (tests/test_backends.py)
+        self.record_decisions = False
+        self.decision_log: List[tuple] = []
 
     # ------------------------------------------------------------------
-    def bind(self, sim) -> None:
-        self.sim = sim
+    def bind(self, backend) -> None:
+        self.backend = backend
+        self.sim = backend.sim
 
     def on_arrival(self, t: float, req: Request) -> None:
         raise NotImplementedError
@@ -79,8 +93,15 @@ class BasePolicy:
             else:
                 assert rep.work is None, f"replica {rid} busy"
                 rep.work = w
-        self.sim.push(t + duration, "DONE", w)
+        self._emit(w)
         return w
+
+    def _emit(self, w: Work) -> None:
+        if self.record_decisions:
+            self.decision_log.append(
+                ("start", w.kind, tuple(w.replica_ids),
+                 tuple(r.rid for r in w.requests)))
+        self.backend.submit(w)
 
     def _release(self, work: Work, *, busy: Optional[float] = None) -> None:
         for rid in work.replica_ids:
@@ -371,6 +392,7 @@ class PecSchedPolicy(BasePolicy):
                     self.decode_queue.append(r)
                 self._drain_decode_queue(t)
             else:
+                self.backend.decode_inline(work)
                 self._finish_requests(t, work.requests, decode_inline_at=t)
         elif work.kind == "long_prefill":
             self._release(work)
@@ -431,7 +453,7 @@ class PecSchedPolicy(BasePolicy):
             rep.decode_load += len(batch)
             w = Work(wid=next(self._wid), kind="short_decode",
                      replica_ids=[rep.rid], requests=batch, start=t, duration=d)
-            self.sim.push(t + d, "DONE", w)
+            self._emit(w)
 
     # ------------------------------------------------------------------
     def _start_short_prefill(self, t, batch, rep_ids, *, colocated=False):
@@ -448,11 +470,13 @@ class PecSchedPolicy(BasePolicy):
 
     def _pause_long(self, t, st: LongState):
         """Suspend a running long prefill (or decode under /CoL)."""
+        if self.record_decisions:
+            self.decision_log.append(("preempt", st.req.rid, st.phase))
         for rid in st.rep_ids:
             rep = self.replicas[rid]
             w = rep.work
             if w is not None and not w.canceled:
-                self.sim.cancel(w)
+                self.backend.cancel(w)
                 elapsed = t - w.start
                 if w.kind == "long_prefill":
                     st.remaining = max(w.duration - elapsed, 0.0)
@@ -571,6 +595,12 @@ class PecSchedPolicy(BasePolicy):
         for r in self.long_queue:
             if r.prefill_start is None:
                 r.phase = Phase.STARVED
+
+
+# every name make_policy accepts — the canonical policy matrix consumed by
+# examples, launchers and the cross-backend test sweeps
+POLICY_NAMES = ("fifo", "fifo_noshort", "reservation", "priority", "pecsched",
+                "pecsched/pe", "pecsched/dis", "pecsched/col", "pecsched/fsp")
 
 
 def make_policy(name: str, cc: ClusterConfig, em: ExecutionModel) -> BasePolicy:

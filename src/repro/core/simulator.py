@@ -114,6 +114,20 @@ class EventHeap:
                 return t, live
         return None
 
+    def unpop(self, t: float, entries: List[Entry]) -> None:
+        """Reinstate a popped batch unprocessed (horizon truncation): the
+        events become pending again instead of silently vanishing, so a
+        truncated replay keeps its in-flight completions inspectable."""
+        for e in entries:
+            e[2] = False
+        slot = self._slots.get(t)
+        if slot is None:
+            self._slots[t] = list(entries)
+            heapq.heappush(self._times, t)
+        else:                               # pragma: no cover - defensive
+            slot.extend(entries)
+        self.n_live += len(entries)
+
 
 @dataclass
 class Work:
@@ -133,10 +147,21 @@ class Work:
 
 
 class Simulator:
-    def __init__(self, policy: "BasePolicy"):
+    """Shared event-loop driver for every execution backend.
+
+    ``Simulator(policy)`` replays analytically (SimBackend, the default);
+    ``Simulator(policy, backend=EngineBackend(...))`` drives the same policy
+    over real JAX engines.  The loop itself is backend-agnostic: ARRIVAL and
+    DONE events go to the policy, any other kind (engine quanta) goes to
+    ``backend.on_event``.
+    """
+
+    def __init__(self, policy: "BasePolicy", backend=None):
+        from repro.core.backend import SimBackend
         self.policy = policy
+        self.backend = backend if backend is not None else SimBackend()
         self.heap = EventHeap()
-        self._work_entries: Dict[int, Entry] = {}   # wid -> pending DONE entry
+        self._work_entries: Dict[int, Entry] = {}   # wid -> pending entry
         self.now = 0.0
         self.sched_time = 0.0           # wall-clock spent in policy decisions
         self.run_time = 0.0             # wall-clock of the whole run()
@@ -147,7 +172,9 @@ class Simulator:
     # ------------------------------------------------------------------
     def push(self, t: float, kind: str, payload) -> Entry:
         entry = self.heap.push(t, kind, payload)
-        if kind == "DONE":
+        if kind != "ARRIVAL":
+            # one pending entry per Work at a time (its DONE or its next
+            # backend-internal quantum) — cancel() kills whichever is live
             self._work_entries[payload.wid] = entry
         return entry
 
@@ -161,18 +188,30 @@ class Simulator:
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *, horizon: Optional[float] = None
             ) -> Dict:
+        """Replay `requests` to completion (or to `horizon`).
+
+        Horizon semantics: the first event batch strictly past `horizon` is
+        pushed back into the heap unprocessed (`EventHeap.unpop`), so a
+        truncated replay does NOT silently drop in-flight completions — they
+        stay pending in `self.heap` for inspection, and `self.now` stops at
+        the last applied timestamp <= horizon.
+        """
         wall0 = _time.perf_counter()
         self.last_arrival = max(r.arrival for r in requests) if requests else 0.0
         self.heap.load((r.arrival, "ARRIVAL", r) for r in requests)
-        self.policy.bind(self)
+        self.backend.bind(self)
+        self.policy.bind(self.backend)
         on_arrival, on_done = self.policy.on_arrival, self.policy.on_done
         dispatch = self.policy.dispatch
+        backend_event = self.backend.on_event
+        finish = self.backend.finish if self.backend.needs_finish else None
         while True:
             batch = self.heap.pop_batch()
             if batch is None:
                 break
             t, entries = batch
             if horizon is not None and t > horizon:
+                self.heap.unpop(t, entries)
                 break
             self.now = t
             t0 = _time.perf_counter()
@@ -182,11 +221,18 @@ class Simulator:
                     continue
                 if kind == "ARRIVAL":
                     on_arrival(t, payload)
-                else:
+                elif kind == "DONE":
                     self._work_entries.pop(payload.wid, None)
                     if payload.canceled:    # legacy flag-only cancellation
                         continue
+                    if finish is not None:
+                        finish(t, payload)
                     on_done(t, payload)
+                else:                       # backend-internal (engine quantum)
+                    self._work_entries.pop(payload.wid, None)
+                    if payload.canceled:
+                        continue
+                    backend_event(t, kind, payload)
                 self.n_events += 1
             dispatch(t)
             self.sched_time += _time.perf_counter() - t0

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.configs.base import ARCH_IDS
+from repro.core.schedulers import POLICY_NAMES
 from repro.core.workload import PAPER_SETUPS
 from repro.models import init_params
 from repro.serving import MiniCluster, ServeRequest
@@ -23,8 +24,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mistral_7b",
                     choices=ARCH_IDS + list(PAPER_SETUPS))
-    ap.add_argument("--policy", default="pecsched",
-                    choices=["pecsched", "fifo"])
+    ap.add_argument("--policy", default="pecsched", choices=POLICY_NAMES)
     ap.add_argument("--n", type=int, default=24)
     ap.add_argument("--engines", type=int, default=2)
     args = ap.parse_args()

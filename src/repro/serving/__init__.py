@@ -1,3 +1,4 @@
+from repro.serving.backend import EngineBackend
 from repro.serving.cluster import MiniCluster, ServeRequest
-from repro.serving.engine import PrefillState, ReplicaEngine
+from repro.serving.engine import PrefillState, ReplicaEngine, SlotsFull
 from repro.serving.kvcache import PagedKVCache

@@ -1,0 +1,403 @@
+"""EngineBackend: the real-execution half of the ExecutionBackend split.
+
+Every abstract command a policy issues (core/schedulers.py) is carried out
+on genuine `ReplicaEngine`s:
+
+* ``short_prefill`` / ``short_full`` / ``long_full`` / ``*_decode`` run to
+  completion the moment they are submitted (they are never preempted by any
+  policy), and the measured compute time becomes the Work's duration.
+* ``long_prefill`` and ``long_decode`` are *preemptible*: they advance one
+  quantum at a time through backend-internal ``ENGINE_STEP`` events
+  (layers_per_quantum layers per step for prefill — the paper's §5.1
+  suspension state — one decode iteration per step for decode), so a policy
+  can pause them mid-flight and resume bit-exactly from the saved
+  `PrefillState` / decode slot.
+* Short-request KV migrates to the decode replica through `admit` (§5.2);
+  decode is slot-chunked, so a burst larger than `max_slots` waits for
+  evictions instead of crashing (`SlotsFull`).
+
+Two virtual-clock modes:
+
+* ``clock="measured"`` (default): completion times are the *measured* JAX
+  compute seconds — scheduling dynamics reflect the hardware.
+* ``clock="analytic"``: completion times come from the policy's cost-model
+  estimate, exactly like SimBackend, while every command still executes on
+  real engines.  Both backends then see an identical event timeline, which
+  is what makes decision-sequence parity assertable (tests/test_backends.py)
+  rather than merely plausible.
+
+Requests carry cluster-scale token counts (100 K+ for longs); real engines
+are CPU-sized.  Unless a `token_provider` supplies actual prompts (the
+MiniCluster path), prompts are synthesized deterministically per rid with a
+log-scaled, bucketed length so relative ordering (longs >> shorts) survives
+while jit recompiles stay bounded.
+
+A multi-replica long group (ring/fast SP in the analytic world) executes on
+the group's first engine; the policy's bookkeeping keeps the whole group
+busy, which preserves the *scheduling* semantics (that is what this backend
+is for — kernel-level SP lives in repro/sp/).
+"""
+from __future__ import annotations
+
+import math
+import time
+from collections import Counter, deque
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.backend import ExecutionBackend
+from repro.core.request import Request
+from repro.core.simulator import Work
+from repro.serving.engine import PrefillState, ReplicaEngine, SlotsFull
+
+# kinds that no policy ever cancels: execute eagerly at submit time
+_EAGER_KINDS = ("short_prefill", "short_prefill_coloc", "short_decode",
+                "short_decode_inplace", "short_full", "long_full")
+_PREEMPTIBLE_KINDS = ("long_prefill", "long_decode")
+
+# synthesized-prompt length buckets (limits distinct jit shapes per engine)
+_BUCKETS = (4, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256)
+
+
+class EngineBackend(ExecutionBackend):
+    """Drive any `make_policy` policy over real JAX ReplicaEngines."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 128,
+                 layers_per_quantum: int = 2, max_slots: int = 8,
+                 clock: str = "measured", max_new_cap: int = 4,
+                 token_provider: Optional[Callable[[Request],
+                                                   Optional[np.ndarray]]] = None,
+                 seed: int = 0):
+        assert clock in ("measured", "analytic"), clock
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.lpq = layers_per_quantum
+        self.max_slots = max_slots
+        self.clock = clock
+        self.max_new_cap = max_new_cap
+        self.token_provider = token_provider
+        self.seed = seed
+        self.needs_finish = clock == "analytic"
+        self.max_prompt = max(4, max_len - min(max_new_cap, 32) - 1)
+        self._buckets = [b for b in _BUCKETS if b <= self.max_prompt]
+        self._engines: Dict[int, ReplicaEngine] = {}      # replica rid -> engine
+        self._tokens: Dict[int, np.ndarray] = {}          # request rid -> prompt
+        self._psessions: Dict[int, PrefillState] = {}     # in-flight prefills
+        self._dsessions: Dict[int, Dict] = {}             # in-flight long decodes
+        self._kv: Dict[int, PrefillState] = {}            # prefilled, not decoded
+        self.generated: Dict[int, List[int]] = {}         # request rid -> tokens
+        self.stats = Counter()
+        self.measured_s = 0.0
+
+    # ------------------------------------------------------------------
+    def reset(self) -> None:
+        """Clear per-run state; engines (and their jit caches) survive so a
+        policy sweep pays compilation once."""
+        for eng in self._engines.values():
+            for slot in range(eng.max_slots):
+                eng.evict(slot)
+        self._tokens.clear()
+        self._psessions.clear()
+        self._dsessions.clear()
+        self._kv.clear()
+        self.generated.clear()
+        self.stats = Counter()
+        self.measured_s = 0.0
+
+    def prompt_len(self, req: Request) -> int:
+        """Engine-side prompt length this request will execute with."""
+        if self.token_provider is not None:
+            toks = self.token_provider(req)
+            if toks is not None:
+                return int(np.asarray(toks).shape[0])
+        return self._scale_len(req.input_len)
+
+    def warmup(self, lengths, replica_ids) -> None:
+        """Pre-compile the prefill/decode jits for the given prompt lengths
+        on the given replicas, so measured virtual time reflects steady-state
+        compute instead of charging first-shape compilation to whichever
+        policy happens to run first."""
+        for rid in replica_ids:
+            eng = self._engine(rid)
+            for n in sorted(set(lengths)):
+                st = eng.start_prefill(-1, jnp.zeros((1, int(n)), jnp.int32))
+                done = False
+                while not done:
+                    st, done = eng.prefill_quantum(st)
+                eng.prefill_logits(st)
+                slot = eng.admit(-1, st)
+                eng.decode_iteration({slot: 0})
+                eng.evict(slot)
+
+    def _engine(self, rid: int) -> ReplicaEngine:
+        eng = self._engines.get(rid)
+        if eng is None:
+            eng = ReplicaEngine(self.cfg, self.params, max_slots=self.max_slots,
+                                max_len=self.max_len,
+                                layers_per_quantum=self.lpq)
+            self._engines[rid] = eng
+        return eng
+
+    # ---- prompt synthesis / scaling ----------------------------------
+    def _scale_len(self, n: int) -> int:
+        raw = 8.0 * math.log2(1.0 + n / 256.0)
+        for b in self._buckets:
+            if raw <= b:
+                return b
+        return self.max_prompt
+
+    def _prompt(self, req: Request) -> np.ndarray:
+        toks = self._tokens.get(req.rid)
+        if toks is None:
+            if self.token_provider is not None:
+                toks = self.token_provider(req)
+            if toks is None:
+                n = self._scale_len(req.input_len)
+                rng = np.random.default_rng((self.seed,
+                                             req.rid & 0x7FFFFFFF))
+                toks = rng.integers(0, self.cfg.vocab_size, n)
+            toks = np.asarray(toks, np.int32)
+            if toks.shape[0] > self.max_len - 1:
+                raise ValueError(
+                    f"prompt of {toks.shape[0]} tokens exceeds engine "
+                    f"max_len {self.max_len}")
+            self._tokens[req.rid] = toks
+        return toks
+
+    def _target_new(self, req: Request) -> int:
+        return max(1, min(self.max_new_cap, req.output_len))
+
+    # ---- timed execution primitives ----------------------------------
+    def _timed(self, fn, *args):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        leaves = jax.tree.leaves(out)
+        if leaves:
+            jax.block_until_ready(leaves[0])
+        dt = time.perf_counter() - t0
+        self.measured_s += dt
+        return out, dt
+
+    def _start_prefill(self, eng: ReplicaEngine, req: Request) -> PrefillState:
+        st, _ = self._timed(eng.start_prefill, req.rid,
+                            jnp.asarray(self._prompt(req)[None]))
+        return st
+
+    def _prefill_quanta(self, eng: ReplicaEngine, st: PrefillState,
+                        target_layer: int) -> float:
+        dt = 0.0
+        while st.layer < target_layer:
+            (_, _done), d = self._timed(eng.prefill_quantum, st)
+            dt += d
+            self.stats["prefill_quanta"] += 1
+        return dt
+
+    def _complete_prefill(self, eng: ReplicaEngine, req: Request) -> float:
+        """Run remaining layers + first-token logits; park KV for decode."""
+        st = self._psessions.pop(req.rid, None)
+        if st is None:
+            st = self._start_prefill(eng, req)
+        dt = self._prefill_quanta(eng, st, self.cfg.num_layers)
+        logits, d = self._timed(eng.prefill_logits, st)
+        dt += d
+        self.generated[req.rid] = [int(jnp.argmax(logits[0]))]
+        self._kv[req.rid] = st
+        return dt
+
+    def _decode_batch(self, eng: ReplicaEngine, reqs: List[Request]) -> float:
+        """Admit each request's parked KV and decode to its target length,
+        chunked by free slots: a burst larger than the slot count waits for
+        evictions inside the batch instead of raising through the loop."""
+        dt = 0.0
+        pending = deque(reqs)
+        while pending:
+            admitted: Dict[int, Request] = {}
+            toks: Dict[int, int] = {}
+            remaining: Dict[int, int] = {}
+            while pending and eng.free_slots():
+                r = pending.popleft()
+                try:
+                    slot = eng.admit(r.rid, self._kv[r.rid])
+                except SlotsFull:           # lost a race with a long's slot
+                    pending.appendleft(r)
+                    break
+                self.stats["kv_migrations"] += 1
+                del self._kv[r.rid]
+                admitted[slot] = r
+                toks[slot] = self.generated[r.rid][-1]
+                remaining[slot] = self._target_new(r) - 1
+            if not admitted:
+                raise SlotsFull(
+                    "decode pool wedged: no slot frees up for "
+                    f"{len(pending)} pending requests")
+            while True:
+                active = {s: toks[s] for s, n in remaining.items() if n > 0}
+                if not active:
+                    break
+                out, d = self._timed(eng.decode_iteration, active)
+                dt += d
+                self.stats["decode_iters"] += 1
+                for s, tok in out.items():
+                    self.generated[admitted[s].rid].append(tok)
+                    toks[s] = tok
+                    remaining[s] -= 1
+            for s in admitted:
+                eng.evict(s)
+        return dt
+
+    # ---- eager kinds --------------------------------------------------
+    def _execute(self, work: Work) -> float:
+        eng = self._engine(work.replica_ids[0])
+        kind = work.kind
+        dt = 0.0
+        if kind in ("short_prefill", "short_prefill_coloc"):
+            for r in work.requests:
+                dt += self._complete_prefill(eng, r)
+        elif kind in ("short_decode", "short_decode_inplace"):
+            dt += self._decode_batch(eng, work.requests)
+        elif kind in ("short_full", "long_full"):
+            for r in work.requests:
+                dt += self._complete_prefill(eng, r)
+            dt += self._decode_batch(eng, work.requests)
+        else:                               # pragma: no cover - guarded by submit
+            raise ValueError(kind)
+        self.stats[kind] += 1
+        return dt
+
+    # ------------------------------------------------------------------
+    # ExecutionBackend interface
+    # ------------------------------------------------------------------
+    def submit(self, work: Work) -> None:
+        t = work.start
+        if work.kind in _EAGER_KINDS:
+            measured = self._execute(work)
+            if self.clock == "measured":
+                work.duration = measured
+            self.sim.push(t + work.duration, "DONE", work)
+            return
+        if work.kind not in _PREEMPTIBLE_KINDS:
+            raise ValueError(f"unknown work kind {work.kind!r}")
+        req = work.requests[0]
+        eng = self._engine(work.replica_ids[0])
+        if work.kind == "long_prefill":
+            if req.rid not in self._psessions and req.rid not in self._kv:
+                self._psessions[req.rid] = self._start_prefill(eng, req)
+        else:                               # long_decode
+            if req.rid not in self._dsessions and req.rid in self._kv:
+                slot = eng.admit(req.rid, self._kv.pop(req.rid))
+                self.stats["kv_migrations"] += 1
+                self._dsessions[req.rid] = {
+                    "slot": slot, "last": self.generated[req.rid][-1],
+                    "remaining": self._target_new(req) - 1}
+        if self.clock == "analytic":
+            self.sim.push(t + work.duration, "DONE", work)
+        else:
+            self.sim.push(t, "ENGINE_STEP", work)
+
+    def decode_inline(self, work: Work) -> None:
+        """/Dis colocated shorts finish with decode modeled inline by the
+        policy; run that decode for real (on the colocation group's first
+        engine) so generations complete and the parked KV is released.  Its
+        measured time stays off the virtual clock, matching the analytic
+        inline model."""
+        self._decode_batch(self._engine(work.replica_ids[0]), work.requests)
+
+    def cancel(self, work: Work) -> bool:
+        ok = self.sim.cancel(work)
+        if ok and self.clock == "analytic":
+            # analytic clock executes lazily; materialize the progress this
+            # Work made up to the preemption point so the resumed session
+            # continues from a genuine §5.1 suspension state
+            frac = 0.0
+            if work.duration > 0:
+                frac = min(max((self.sim.now - work.start) / work.duration,
+                               0.0), 1.0)
+            req = work.requests[0]
+            eng = self._engine(work.replica_ids[0])
+            if work.kind == "long_prefill":
+                st = self._psessions.get(req.rid)
+                if st is not None:
+                    left = self.cfg.num_layers - st.layer
+                    self._prefill_quanta(eng, st,
+                                         st.layer + int(frac * left))
+            elif work.kind == "long_decode":
+                sess = self._dsessions.get(req.rid)
+                if sess is not None:
+                    self._decode_steps(eng, req, sess,
+                                       int(frac * sess["remaining"]))
+        return ok
+
+    def _decode_steps(self, eng: ReplicaEngine, req: Request, sess: Dict,
+                      n: int) -> float:
+        dt = 0.0
+        for _ in range(min(n, sess["remaining"])):
+            out, d = self._timed(eng.decode_iteration,
+                                 {sess["slot"]: sess["last"]})
+            dt += d
+            self.stats["decode_iters"] += 1
+            tok = out[sess["slot"]]
+            self.generated[req.rid].append(tok)
+            sess["last"] = tok
+            sess["remaining"] -= 1
+        return dt
+
+    # ---- measured clock: quantum events ------------------------------
+    def on_event(self, t: float, kind: str, work: Work) -> None:
+        assert kind == "ENGINE_STEP", kind
+        req = work.requests[0]
+        eng = self._engine(work.replica_ids[0])
+        if work.kind == "long_prefill":
+            st = self._psessions.get(req.rid)
+            if st is None:                  # finished before a late preemption
+                work.duration = max(t - work.start, 0.0)
+                self.sim.push(t, "DONE", work)
+                return
+            if st.layer < self.cfg.num_layers:
+                (_, done), d = self._timed(eng.prefill_quantum, st)
+                self.stats["prefill_quanta"] += 1
+            else:
+                done, d = True, 0.0
+            if not done:
+                self.sim.push(t + d, "ENGINE_STEP", work)
+                return
+            logits, d2 = self._timed(eng.prefill_logits, st)
+            self.generated[req.rid] = [int(jnp.argmax(logits[0]))]
+            self._kv[req.rid] = self._psessions.pop(req.rid)
+            work.duration = t + d + d2 - work.start
+            self.sim.push(t + d + d2, "DONE", work)
+        else:                               # long_decode
+            sess = self._dsessions.get(req.rid)
+            if sess is None or sess["remaining"] <= 0:
+                if sess is not None:
+                    eng.evict(sess["slot"])
+                    del self._dsessions[req.rid]
+                work.duration = max(t - work.start, 0.0)
+                self.sim.push(t, "DONE", work)
+                return
+            d = self._decode_steps(eng, req, sess, 1)
+            if sess["remaining"] <= 0:
+                eng.evict(sess["slot"])
+                del self._dsessions[req.rid]
+                work.duration = t + d - work.start
+                self.sim.push(t + d, "DONE", work)
+            else:
+                self.sim.push(t + d, "ENGINE_STEP", work)
+
+    # ---- analytic clock: lazy completion ------------------------------
+    def finish(self, t: float, work: Work) -> None:
+        if work.kind == "long_prefill":
+            req = work.requests[0]
+            if req.rid not in self._kv:     # run whatever layers remain
+                self._complete_prefill(self._engine(work.replica_ids[0]), req)
+        elif work.kind == "long_decode":
+            req = work.requests[0]
+            sess = self._dsessions.pop(req.rid, None)
+            if sess is not None:
+                eng = self._engine(work.replica_ids[0])
+                self._decode_steps(eng, req, sess, sess["remaining"])
+                eng.evict(sess["slot"])

@@ -1,24 +1,38 @@
-"""Real-execution mini cluster: PecSched's decision tree driving actual
-ReplicaEngines on CPU. Virtual time advances by *measured* compute, so the
-scheduling dynamics (preemption, disaggregation, colocation surrogate) are
-exercised on genuine JAX execution rather than the analytic cost model.
+"""Real-execution mini cluster: the full policy stack driving actual
+ReplicaEngines on CPU.
+
+Historically this module carried its own hardcoded 2-policy decision tree
+(a divergent reimplementation of FIFO/PecSched, including a `_find_idle`
+that ignored its `for_long` parameter, so longs and shorts competed for
+engines identically).  That tree is gone: MiniCluster is now a thin driver
+that binds ANY `make_policy` policy — all nine names, ablations included —
+to an `EngineBackend`, so the scheduling brain is the same code the
+analytic simulator runs, and long-vs-short placement follows each policy's
+actual rules.
+
+Virtual time advances by *measured* compute (clock="measured"), so the
+scheduling dynamics (layer-granular preemption, KV migration to the decode
+replica, colocation) are exercised on genuine JAX execution rather than the
+analytic cost model.  clock="analytic" instead reuses the cost-model
+timeline while still executing for real — the cross-backend parity mode.
 
 This is the end-to-end serving driver used by examples/serve_cluster.py and
 the integration tests (preempt-resume bit-exactness).
 """
 from __future__ import annotations
 
-import time
-from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.serving.engine import PrefillState, ReplicaEngine
+from repro.core.cluster import ClusterConfig
+from repro.core.costmodel import ExecutionModel
+from repro.core.request import Phase, Request
+from repro.core.schedulers import make_policy
+from repro.core.simulator import Simulator
+from repro.serving.backend import EngineBackend
 
 
 @dataclass
@@ -36,195 +50,74 @@ class ServeRequest:
     n_preemptions: int = 0
 
 
-@dataclass
-class _EngineState:
-    engine: ReplicaEngine
-    vtime: float = 0.0
-    prefill: Optional[PrefillState] = None        # active (short) prefill
-    prefill_req: Optional[ServeRequest] = None
-    long_prefill: Optional[PrefillState] = None   # paused/active long prefill
-    long_req: Optional[ServeRequest] = None
-    long_paused: bool = False
-    decode_tokens: Dict[int, int] = field(default_factory=dict)  # slot -> tok
-    decode_req: Dict[int, ServeRequest] = field(default_factory=dict)
-
-
 class MiniCluster:
-    """n_engines general engines + 1 dedicated decode engine (PecSched) or
-    co-located decode (FIFO baseline)."""
+    """n_engines general engines (+ 1 dedicated decode engine for the
+    PecSched family, matching the paper's disaggregated pool) driven by any
+    scheduling policy from `make_policy`."""
 
     def __init__(self, cfg: ModelConfig, params, *, n_engines: int = 2,
                  policy: str = "pecsched", max_len: int = 512,
-                 long_threshold: int = 128, layers_per_quantum: int = 2):
+                 long_threshold: int = 128, layers_per_quantum: int = 2,
+                 clock: str = "measured", seed: int = 0):
         self.cfg = cfg
         self.policy = policy
         self.long_threshold = long_threshold
-        self.engines = [
-            _EngineState(engine=ReplicaEngine(cfg, params, max_len=max_len,
-                                              layers_per_quantum=layers_per_quantum))
-            for _ in range(n_engines)]
-        self.decode_engine = _EngineState(
-            engine=ReplicaEngine(cfg, params, max_len=max_len,
-                                 layers_per_quantum=layers_per_quantum)) \
-            if policy == "pecsched" else None
-        self.queue: deque[ServeRequest] = deque()
+        pecfam = policy.startswith("pecsched")
+        self.cc = ClusterConfig(
+            n_nodes=1, gpus_per_node=n_engines + (1 if pecfam else 0), tp=1,
+            n_short_decode_replicas=1 if pecfam else 0,
+            max_batch_tokens=max(2 * max_len, 256),
+            max_coloc_tokens=max_len,
+            max_decode_concurrency=8)
+        self.em = ExecutionModel(cfg, self.cc.replica_spec())
+        self._tok: Dict[int, np.ndarray] = {}
+        self.backend = EngineBackend(
+            cfg, params, max_len=max_len,
+            layers_per_quantum=layers_per_quantum, clock=clock,
+            max_new_cap=1 << 30,                   # honor each max_new exactly
+            token_provider=lambda r: self._tok.get(r.rid), seed=seed)
+        self._pending: List[ServeRequest] = []
         self.done: List[ServeRequest] = []
+        self.summary: Dict = {}
+        self.policy_obj = None
         self.vclock = 0.0
 
     # ------------------------------------------------------------------
     def submit(self, req: ServeRequest) -> None:
-        self.queue.append(req)
-
-    def _timed(self, es: _EngineState, fn, *args):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(jax.tree.leaves(out)[0] if jax.tree.leaves(out)
-                              else jnp.zeros(()))
-        es.vtime += time.perf_counter() - t0
-        return out
+        self._pending.append(req)
 
     # ------------------------------------------------------------------
-    def run(self, until_empty: bool = True, max_rounds: int = 10_000) -> None:
-        rounds = 0
-        while rounds < max_rounds:
-            rounds += 1
-            self.vclock = min(e.vtime for e in self.engines)
-            self._dispatch()
-            progressed = self._advance_engines()
-            if not progressed and not self.queue:
-                if all(e.prefill is None and e.long_prefill is None
-                       and not e.decode_tokens for e in self.engines) \
-                        and (self.decode_engine is None
-                             or not self.decode_engine.decode_tokens):
-                    break
-
-    # ------------------------------------------------------------------
-    def _dispatch(self) -> None:
-        while self.queue:
-            req = self.queue[0]
-            arrived = req.arrival <= self.vclock
-            if not arrived:
-                # advance virtual clock if everything is idle
-                if all(e.prefill is None and e.long_prefill is None
-                       and not e.decode_tokens for e in self.engines):
-                    for e in self.engines:
-                        e.vtime = max(e.vtime, req.arrival)
-                    self.vclock = req.arrival
-                else:
-                    return
-            if req.is_long:
-                es = self._find_idle(for_long=True)
-                if es is None:
-                    return
-                self.queue.popleft()
-                req.prefill_start = es.vtime
-                es.long_req = req
-                es.long_prefill = es.engine.start_prefill(
-                    req.rid, jnp.asarray(req.tokens[None]))
-                es.long_paused = False
-            else:
-                es = self._find_idle(for_long=False)
-                if es is None and self.policy == "pecsched":
-                    es = self._preempt_long()
-                if es is None:
-                    return
-                self.queue.popleft()
-                req.prefill_start = es.vtime
-                es.prefill_req = req
-                es.prefill = es.engine.start_prefill(
-                    req.rid, jnp.asarray(req.tokens[None]))
-
-    def _find_idle(self, *, for_long: bool) -> Optional[_EngineState]:
-        for es in self.engines:
-            if es.prefill is None and es.long_prefill is None:
-                if self.policy == "pecsched" or not es.decode_tokens:
-                    return es
-        return None
-
-    def _preempt_long(self) -> Optional[_EngineState]:
-        for es in self.engines:
-            if es.long_prefill is not None and not es.long_paused \
-                    and es.prefill is None:
-                es.long_paused = True            # §5.1: keep KV + one layer's x
-                es.long_req.n_preemptions += 1
-                return es
-        return None
-
-    # ------------------------------------------------------------------
-    def _advance_engines(self) -> bool:
-        progressed = False
-        for es in self.engines:
-            progressed |= self._advance(es)
-        if self.decode_engine is not None:
-            progressed |= self._advance_decode_pool(self.decode_engine)
-        return progressed
-
-    def _advance(self, es: _EngineState) -> bool:
-        # 1) short prefill quantum (preempts the paused long on this engine)
-        if es.prefill is not None:
-            st, done_pf = self._timed(es, es.engine.prefill_quantum, es.prefill)
-            es.prefill = st
-            if done_pf:
-                req = es.prefill_req
-                req.first_token = es.vtime
-                logits = self._timed(es, es.engine.prefill_logits, st)
-                first = int(jnp.argmax(logits[0]))
-                req.generated.append(first)
-                target = self.decode_engine if self.decode_engine is not None else es
-                slot = target.engine.admit(req.rid, st)   # KV migration (§5.2)
-                target.decode_tokens[slot] = first
-                target.decode_req[slot] = req
-                es.prefill = None
-                es.prefill_req = None
-                if es.long_prefill is not None:
-                    es.long_paused = False        # resume the long (§5)
-            return True
-        # 2) long prefill quantum
-        if es.long_prefill is not None and not es.long_paused:
-            st, done_pf = self._timed(es, es.engine.prefill_quantum,
-                                      es.long_prefill)
-            es.long_prefill = st
-            if done_pf:
-                req = es.long_req
-                req.first_token = es.vtime
-                logits = self._timed(es, es.engine.prefill_logits, st)
-                first = int(jnp.argmax(logits[0]))
-                req.generated.append(first)
-                slot = es.engine.admit(req.rid, st)
-                es.decode_tokens[slot] = first
-                es.decode_req[slot] = req
-                es.long_prefill = None
-                es.long_req = None
-            return True
-        # 3) decode iteration (colocated with nothing else here)
-        if es.decode_tokens:
-            self._decode_iteration(es)
-            return True
-        return False
-
-    def _advance_decode_pool(self, es: _EngineState) -> bool:
-        if not es.decode_tokens:
-            return False
-        self._decode_iteration(es)
-        return True
-
-    def _decode_iteration(self, es: _EngineState) -> None:
-        out = self._timed(es, es.engine.decode_iteration, es.decode_tokens)
-        finished = []
-        for slot, tok in out.items():
-            req = es.decode_req[slot]
-            req.generated.append(tok)
-            if len(req.generated) >= req.max_new:
-                finished.append(slot)
-        for slot in finished:
-            req = es.decode_req.pop(slot)
-            req.finish = es.vtime
-            self.done.append(req)
-            es.engine.evict(slot)
-            del es.decode_tokens[slot]
-        for slot, tok in out.items():
-            if slot in es.decode_req:
-                es.decode_tokens[slot] = tok
+    def run(self, until_empty: bool = True, max_rounds: int = 0) -> None:
+        """Serve everything submitted since the last run.  Engines (and
+        their jit caches) are reused across runs, so a warmup run amortizes
+        compilation; each run binds a fresh policy instance."""
+        del until_empty, max_rounds                # legacy signature
+        by_rid: Dict[int, ServeRequest] = {}
+        reqs: List[Request] = []
+        for sr in self._pending:
+            toks = np.asarray(sr.tokens, np.int32)
+            self._tok[sr.rid] = toks
+            reqs.append(Request(
+                rid=sr.rid, arrival=sr.arrival, input_len=int(toks.shape[0]),
+                output_len=sr.max_new,
+                is_long=sr.is_long or toks.shape[0] >= self.long_threshold))
+            by_rid[sr.rid] = sr
+        self._pending.clear()
+        self.backend.reset()
+        pol = make_policy(self.policy, self.cc, self.em)
+        sim = Simulator(pol, backend=self.backend)
+        self.summary = sim.run(reqs)
+        self.policy_obj = pol
+        self.vclock = sim.now
+        for r in pol.all_requests:
+            sr = by_rid[r.rid]
+            sr.prefill_start = r.prefill_start
+            sr.first_token = r.first_token
+            sr.finish = r.finish
+            sr.n_preemptions = r.n_preemptions
+            sr.generated = list(self.backend.generated.get(r.rid, []))
+            if r.phase == Phase.DONE:
+                self.done.append(sr)
 
     # ------------------------------------------------------------------
     def metrics(self) -> Dict:

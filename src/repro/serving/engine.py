@@ -24,6 +24,16 @@ from repro.models import model as mdl
 from repro.models.layers import KVCache
 
 
+class SlotsFull(RuntimeError):
+    """All decode slots of a ReplicaEngine are occupied.
+
+    Raised by `admit` instead of the bare IndexError the empty free-slot
+    list used to produce; callers (EngineBackend's slot-chunked decode, the
+    decode-queue drain) catch it and wait for an eviction rather than
+    crashing the serving loop.
+    """
+
+
 @dataclass
 class PrefillState:
     """Suspension state of a paused prefill (paper §5.1)."""
@@ -126,8 +136,14 @@ class ReplicaEngine:
 
     def admit(self, rid: int, st: PrefillState) -> int:
         """Install a finished prefill's KV into a decode slot (the §5.2 KV
-        migration — here an in-memory copy)."""
-        slot = self.free_slots()[0]
+        migration — here an in-memory copy).  Raises `SlotsFull` when every
+        slot is occupied — the request must wait for an eviction."""
+        free = self.free_slots()
+        if not free:
+            raise SlotsFull(
+                f"engine has no free decode slot for request {rid} "
+                f"({self.max_slots} occupied)")
+        slot = free[0]
         S = st.tokens.shape[1]
         k = jnp.stack(st.kv_k, 0)[:, 0]      # (L, KV, S, hd)
         v = jnp.stack(st.kv_v, 0)[:, 0]

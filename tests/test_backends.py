@@ -1,0 +1,236 @@
+"""Cross-backend tests: one scheduling brain, two execution backends.
+
+* Parity harness: the same deterministic mini-trace replayed through
+  SimBackend and EngineBackend (analytic clock) must produce IDENTICAL
+  decision sequences — placement order, preemption counts, completion sets —
+  for every `make_policy` name.
+* Engine slot-exhaustion regression: `admit` signals `SlotsFull` cleanly and
+  the decode path waits for evictions instead of crashing.
+* Measured-clock sweep: every policy runs end-to-end on real engines with a
+  tiny dense model and conserves requests.
+* Horizon regression: a truncated `Simulator.run` keeps (not drops) the
+  event batch that crosses the horizon.
+"""
+import copy
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core import (POLICY_NAMES, ClusterConfig, ExecutionModel, Phase,
+                        Simulator, make_policy)
+from repro.core.request import Request
+from repro.models import init_params
+from repro.serving.backend import EngineBackend
+from repro.serving.engine import ReplicaEngine, SlotsFull
+
+ALL_POLICIES = list(POLICY_NAMES)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = dataclasses.replace(
+        reduced_config(get_config("mistral_7b"), layers=2),
+        dtype="float32", sliding_window=0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def cluster(small_model):
+    cfg, _ = small_model
+    cc = ClusterConfig(n_nodes=1, gpus_per_node=3, tp=1,
+                       n_short_decode_replicas=1, max_decode_concurrency=8)
+    return cc, ExecutionModel(cfg, cc.replica_spec())
+
+
+@pytest.fixture(scope="module")
+def engine_backend(small_model):
+    """Shared analytic-clock backend: engines (and jit caches) persist across
+    the policy sweep; reset() clears per-run state."""
+    cfg, params = small_model
+    return EngineBackend(cfg, params, max_len=128, layers_per_quantum=1,
+                         clock="analytic")
+
+
+def mini_trace():
+    """Deterministic mini-trace: two longs under sustained short pressure on
+    a 2-general-replica cluster — forces HOL blocking for FIFO, reservation
+    splits, and repeated preemption for PecSched."""
+    rng = np.random.default_rng(0)
+    reqs, t = [], 0.0
+    for i in range(14):
+        is_long = i in (0, 7)
+        t += 0.002 if i else 0.0
+        reqs.append(Request(
+            rid=i, arrival=round(t, 6),
+            input_len=300_000 if is_long else int(rng.integers(300, 3000)),
+            output_len=60 if is_long else int(rng.integers(10, 60)),
+            is_long=is_long))
+    return reqs
+
+
+# ---------------- cross-backend parity ---------------------------------------
+@pytest.mark.parametrize("pol", ALL_POLICIES)
+def test_backend_parity(cluster, engine_backend, pol):
+    """Same trace, same policy, two execution worlds: the decision sequences
+    must be identical when the engine runs on the analytic clock."""
+    cc, em = cluster
+    trace = mini_trace()
+
+    p_sim = make_policy(pol, cc, em)
+    p_sim.record_decisions = True
+    s_sim = Simulator(p_sim).run(copy.deepcopy(trace))
+
+    engine_backend.reset()
+    p_eng = make_policy(pol, cc, em)
+    p_eng.record_decisions = True
+    s_eng = Simulator(p_eng, backend=engine_backend).run(copy.deepcopy(trace))
+
+    assert p_sim.decision_log == p_eng.decision_log
+    assert s_sim["preemptions"] == s_eng["preemptions"]
+    assert {r.rid for r in p_sim.done_requests} == \
+        {r.rid for r in p_eng.done_requests}
+    # every completed request actually generated tokens on the engines
+    for r in p_eng.done_requests:
+        assert len(engine_backend.generated.get(r.rid, [])) >= 1
+
+
+def test_preempted_long_generates_same_tokens(cluster, engine_backend):
+    """§5.1 end-to-end: the long is preempted and resumed under PecSched but
+    never under FIFO — the greedy tokens must match anyway (bit-exact
+    suspension state + KV migration)."""
+    cc, em = cluster
+    outs = {}
+    for pol in ("fifo", "pecsched"):
+        engine_backend.reset()
+        p = make_policy(pol, cc, em)
+        s = Simulator(p, backend=engine_backend).run(
+            copy.deepcopy(mini_trace()))
+        assert s["long_completed"] == 2
+        outs[pol] = {r.rid: list(engine_backend.generated[r.rid])
+                     for r in p.done_requests if r.is_long}
+        if pol == "pecsched":
+            assert s["preemptions"] > 0
+    assert outs["fifo"] == outs["pecsched"]
+
+
+# ---------------- measured-clock sweep ---------------------------------------
+@pytest.fixture(scope="module")
+def measured_backend(small_model):
+    cfg, params = small_model
+    return EngineBackend(cfg, params, max_len=128, layers_per_quantum=1,
+                         clock="measured")
+
+
+@pytest.mark.parametrize("pol", ALL_POLICIES)
+def test_engine_sweep_measured(measured_backend, cluster, pol):
+    """Every make_policy name serves the mini-trace end-to-end on real
+    engines with the measured virtual clock."""
+    cc, em = cluster
+    be = measured_backend
+    be.reset()
+    p = make_policy(pol, cc, em)
+    s = Simulator(p, backend=be).run(copy.deepcopy(mini_trace()))
+    done = s["short_completed"] + s["long_completed"]
+    starved = sum(1 for r in p.all_requests if r.phase == Phase.STARVED)
+    # fifo_noshort refuses longs at arrival (Fig.2 comparison arm)
+    admitted = len(p.all_requests) - \
+        (s["n_long"] if pol == "fifo_noshort" else 0)
+    assert done + starved == admitted
+    assert be.measured_s > 0.0
+    # every completed request generated its full target, whichever execution
+    # path served it (incl. the /Dis colocated inline-decode path), and no
+    # parked KV is left behind
+    for r in p.done_requests:
+        assert len(be.generated[r.rid]) == be._target_new(r), (pol, r.rid)
+    assert not be._kv
+
+
+def test_dis_coloc_inline_decode_completes(small_model, cluster,
+                                           engine_backend):
+    """/Dis colocated shorts finish with decode modeled inline by the policy;
+    the engine backend must still run that decode for real — full greedy
+    generations, no parked KV left behind."""
+    cfg, _ = small_model
+    _, _em = cluster
+    cc = ClusterConfig(n_nodes=1, gpus_per_node=2, tp=1,
+                       n_short_decode_replicas=1, max_decode_concurrency=8)
+    em = ExecutionModel(cfg, cc.replica_spec())
+    reqs = [Request(rid=0, arrival=0.0, input_len=300_000, output_len=60,
+                    is_long=True)]
+    t0 = em.prefill_time(300_000) + 1e-3    # arrive during the long's decode
+    reqs += [Request(rid=i, arrival=t0 + 1e-5 * i, input_len=2500,
+                     output_len=20) for i in range(1, 16)]
+    be = engine_backend
+    be.reset()
+    p = make_policy("pecsched/dis", cc, em)
+    s = Simulator(p, backend=be).run(copy.deepcopy(reqs))
+    assert s["short_completed"] == 15 and s["long_completed"] == 1
+    assert be.stats["short_prefill_coloc"] > 0   # the path was exercised
+    assert not be._kv                            # nothing parked/leaked
+    for r in p.done_requests:
+        assert len(be.generated[r.rid]) == be._target_new(r)
+
+
+# ---------------- slot exhaustion --------------------------------------------
+def test_admit_raises_slots_full(small_model):
+    cfg, params = small_model
+    eng = ReplicaEngine(cfg, params, max_slots=2, max_len=64)
+    toks = jnp.zeros((1, 8), jnp.int32)
+    states = []
+    for rid in range(2):
+        st = eng.start_prefill(rid, toks)
+        done = False
+        while not done:
+            st, done = eng.prefill_quantum(st)
+        states.append(st)
+        eng.admit(rid, st)
+    st = eng.start_prefill(2, toks)
+    done = False
+    while not done:
+        st, done = eng.prefill_quantum(st)
+    with pytest.raises(SlotsFull):
+        eng.admit(2, st)
+    eng.evict(0)                     # an eviction unblocks admission
+    assert eng.admit(2, st) == 0
+
+
+def test_decode_waits_for_slots(small_model, cluster):
+    """A decode burst larger than the slot count completes by waiting for
+    evictions (slot-chunked) instead of crashing with IndexError."""
+    cfg, params = small_model
+    cc, em = cluster
+    be = EngineBackend(cfg, params, max_len=128, layers_per_quantum=1,
+                       max_slots=2, clock="analytic")
+    reqs = [Request(rid=i, arrival=0.0, input_len=500, output_len=8)
+            for i in range(7)]
+    p = make_policy("pecsched", cc, em)
+    s = Simulator(p, backend=be).run(reqs)
+    assert s["short_completed"] == 7
+    assert be.stats["kv_migrations"] == 7
+    for i in range(7):
+        assert len(be.generated[i]) == be._target_new(reqs[0])
+
+
+# ---------------- horizon truncation -----------------------------------------
+def test_horizon_keeps_inflight_events(cluster):
+    """Truncating a replay must not silently drop the popped event batch:
+    completions past the horizon stay pending in the heap."""
+    cc, em = cluster
+    reqs = [Request(rid=0, arrival=0.0, input_len=2000, output_len=50)]
+    full = Simulator(make_policy("fifo", cc, em)).run(copy.deepcopy(reqs))
+    assert full["short_completed"] == 1
+
+    p = make_policy("fifo", cc, em)
+    sim = Simulator(p)
+    s = sim.run(copy.deepcopy(reqs), horizon=1e-9)   # before the DONE fires
+    assert s["short_completed"] == 0
+    # the DONE event survived truncation instead of vanishing
+    assert sim.heap.n_live == 1
+    batch = sim.heap.pop_batch()
+    assert batch is not None and batch[1][0][0] == "DONE"
+    assert sim.now <= 1e-9
