@@ -1,22 +1,25 @@
-"""Shared benchmark infrastructure: cached per-model experiment runs.
+"""Shared benchmark infrastructure — a thin consumer of the experiments
+subsystem (`repro.experiments`).
 
-Every figure/table benchmark reads from one simulation sweep per model so
-the whole suite stays fast and internally consistent.
+Every figure/table benchmark reads from one simulation sweep per model;
+sweeps execute through `repro.experiments.runner.run_sweep`, so benchmark
+runs share the experiments subsystem's per-spec JSON result cache (keyed
+by spec hash under ``benchmarks/artifacts/experiments/``) and its regime
+conventions.  Set ``REPRO_SWEEP_WORKERS=N`` to fan sim sweeps out over N
+processes.
 """
 from __future__ import annotations
 
-import copy
-import json
-import time
+import os
 from pathlib import Path
-from typing import Dict, List
+from typing import Dict
 
-from repro.core import (Simulator, experiment_trace, make_policy,
-                        paper_cluster)
+from repro.core import POLICY_NAMES, paper_cluster
+from repro.experiments import grid, run_sweep
+from repro.experiments.runner import short_capacity
 
 ART = Path(__file__).parent / "artifacts"
-POLICIES = ["fifo", "fifo_noshort", "reservation", "priority", "pecsched",
-            "pecsched/pe", "pecsched/dis", "pecsched/col", "pecsched/fsp"]
+POLICIES = list(POLICY_NAMES)
 MODELS = ["mistral_7b", "phi3_14b", "yi_34b", "llama31_70b"]
 
 # Default experiment regime (see EXPERIMENTS.md §Simulator-calibration):
@@ -27,26 +30,19 @@ N_REQUESTS = 12000
 
 def run_model_sweep(model: str, *, n_requests: int = N_REQUESTS,
                     seed: int = 0, force: bool = False) -> Dict[str, Dict]:
-    """All policies on one model's cluster; cached as JSON."""
-    out_path = ART / "sim" / f"{model}.seed{seed}.json"
-    if out_path.exists() and not force:
-        return json.loads(out_path.read_text())
-    cc, em = paper_cluster(model)
-    reqs, cap = experiment_trace(cc, em, n_requests=n_requests, seed=seed)
+    """All policies on one model's cluster; cached per spec hash."""
+    specs = grid(POLICIES, models=(model,), seeds=(seed,),
+                 n_requests=n_requests)
+    workers = int(os.environ.get("REPRO_SWEEP_WORKERS", "1"))
+    swept = run_sweep(specs, cache_dir=ART / "experiments",
+                      workers=workers, force=force)
+    cc, _ = paper_cluster(model)
     results: Dict[str, Dict] = {"_meta": {
         "model": model, "n_requests": n_requests, "seed": seed,
-        "short_capacity_rps": cap, "n_replicas": cc.n_replicas, "tp": cc.tp}}
-    for pol in POLICIES:
-        p = make_policy(pol, cc, em)
-        sim = Simulator(p)
-        t0 = time.perf_counter()
-        s = sim.run(copy.deepcopy(reqs))
-        s["wall_s"] = time.perf_counter() - t0
-        s["sched_time_s"] = sim.sched_time
-        s["n_dispatches"] = sim.n_dispatches
-        results[pol] = s
-    out_path.parent.mkdir(parents=True, exist_ok=True)
-    out_path.write_text(json.dumps(results, indent=1, default=float))
+        "short_capacity_rps": short_capacity(model),
+        "n_replicas": cc.n_replicas, "tp": cc.tp}}
+    for spec, summary in swept.items():
+        results[spec.policy] = summary
     return results
 
 

@@ -14,8 +14,9 @@ from repro.core import TraceConfig, generate_trace, trace_stats
 
 
 def _pct(results, pol, p=99):
-    v = results[pol]["short_qd_pct"][str(p)] if str(p) in results[pol]["short_qd_pct"] \
-        else results[pol]["short_qd_pct"][p]
+    # metrics.summarize emits JSON-stable string percentile keys, so live
+    # summaries and cache-file round trips index identically
+    v = results[pol]["short_qd_pct"][str(p)]
     return v if v is not None else float("nan")
 
 

@@ -17,7 +17,8 @@ sys.path.insert(0, str(Path(__file__).parent.parent))
 from benchmarks import paper_figures as pf
 from benchmarks import roofline as rl
 from benchmarks import sp_costmodel_validation as spv
-from benchmarks.common import ART, MODELS, all_sweeps, run_model_sweep
+from benchmarks.common import (ART, MODELS, N_REQUESTS, all_sweeps,
+                               run_model_sweep)
 
 
 def main() -> None:
@@ -84,6 +85,25 @@ def main() -> None:
     r = pf.table7_overhead(sweeps)
     csv_rows.append(("table7_ratio_long_mistral", 0,
                      r["mistral_7b"]["ratio_long"]))
+
+    print("\n-- Claims ledger (repro.experiments.claims on the full sweeps) --")
+    from repro.experiments import (evaluate_claims, summarize_results,
+                                   write_report)
+    for m in models:
+        cres = evaluate_claims({("sim", "azure_default"): sweeps[m]})
+        summ = summarize_results(cres)
+        failed = ", ".join(f"{c}({b})" for c, b in summ["failed"]) or "none"
+        print(f"[claims] {m:12s} {summ['n_passed']}/{summ['n_evaluated']} "
+              f"evaluated claims pass (skipped {summ['n_skipped']}); "
+              f"failed: {failed}")
+        if m == "mistral_7b":
+            report = write_report(
+                cres, ART / "claims_report.json",
+                md_path=ART / "claims_ledger.md",
+                meta={"source": "benchmarks.run", "model": m,
+                      "n_requests": args.n_requests or N_REQUESTS})
+            csv_rows.append(("claims_failed_mistral", 0,
+                             report["summary"]["n_failed"]))
 
     if not args.quick:
         print("\n-- Fig.15: scalability to 8192 GPUs --")

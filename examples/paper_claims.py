@@ -1,0 +1,79 @@
+"""Replay the paper's §6 claims as a checked ledger.
+
+Runs the canonical smoke grid (the same grid `pytest -m claims` gates PRs
+on) — or a custom sim grid — evaluates every registered claim, prints the
+markdown ledger, and writes claims_report.json.
+
+    PYTHONPATH=src python examples/paper_claims.py                # smoke grid
+    PYTHONPATH=src python examples/paper_claims.py --sim-only     # skip engines
+    PYTHONPATH=src python examples/paper_claims.py --n 8000 --seed 3 --workers 4
+    PYTHONPATH=src python examples/paper_claims.py --list         # registry only
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import repro.experiments as ex
+from repro.experiments.claims import CLAIMS
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="evaluate the paper-claims ledger")
+    ap.add_argument("--list", action="store_true",
+                    help="print the claim registry and exit")
+    ap.add_argument("--sim-only", action="store_true",
+                    help="skip the real-engine grid (engine claims skip)")
+    ap.add_argument("--n", type=int, default=None,
+                    help="override sim trace size (default: smoke grid)")
+    ap.add_argument("--seed", type=int, default=ex.SMOKE_SEED)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="process-parallel sim sweep workers")
+    ap.add_argument("--cache", default="benchmarks/artifacts/experiments",
+                    help="sweep result cache dir ('' disables)")
+    ap.add_argument("--out", default="benchmarks/artifacts/claims_report.json")
+    args = ap.parse_args()
+
+    if args.list:
+        for c in CLAIMS.values():
+            backends = "+".join(c.backends)
+            print(f"{c.cid:32s} [{c.paper_ref:28s}] ({backends}) "
+                  f"{c.metric_expr} {c.direction} {c.threshold}")
+        print(f"{len(CLAIMS)} claims registered")
+        return
+
+    specs = ex.smoke_grid()
+    if args.sim_only:
+        specs = [s for s in specs if s.backend == "sim"]
+    if args.n is not None or args.seed != ex.SMOKE_SEED:
+        from dataclasses import replace
+        specs = [replace(s, seed=args.seed,
+                         **({"n_requests": args.n}
+                            if args.n is not None and s.backend == "sim"
+                            else {}))
+                 for s in specs]
+    t0 = time.time()
+    results = ex.run_sweep(specs, cache_dir=args.cache or None,
+                           workers=args.workers)
+    cells = ex.smoke_sweep_cells(results)
+    cres = ex.evaluate_claims(cells)
+    print(ex.render_markdown(cres))
+    summ = ex.summarize_results(cres)
+    report = ex.write_report(cres, args.out, meta={
+        "source": "examples/paper_claims.py", "seed": args.seed,
+        "n_specs": len(specs), "wall_s": round(time.time() - t0, 2)})
+    print(f"\n{summ['n_passed']}/{summ['n_evaluated']} evaluated claims pass "
+          f"({summ['n_skipped']} skipped) across backends "
+          f"{summ['backends']} in {time.time()-t0:.1f}s -> {args.out}")
+    if summ["n_failed"]:
+        print("FAILED:", ", ".join(f"{c}({b})" for c, b in summ["failed"]))
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

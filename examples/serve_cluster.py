@@ -128,7 +128,7 @@ def main() -> None:
             return (v if v is not None else float("nan")) * 1e3
         print(f"{pol_name:14s} {s['short_completed']:4d}+{s['long_completed']:d}L "
               f"{ms(s['short_qd_mean']):8.1f}m "
-              f"{ms(s['short_qd_pct'][99]):8.1f}m "
+              f"{ms(s['short_qd_pct']['99']):8.1f}m "
               f"{ms(s['long_jct_mean']):8.1f}m "
               f"{s['preemptions']:7d} {s['long_starved_frac']:7.2f} "
               f"{backend.measured_s:7.2f}s {wall:5.1f}s")
@@ -138,7 +138,7 @@ def main() -> None:
             print(f"  {'(sim)':12s} {ss['short_completed']:4d}+"
                   f"{ss['long_completed']:d}L "
                   f"{ms(ss['short_qd_mean']):8.1f}m "
-                  f"{ms(ss['short_qd_pct'][99]):8.1f}m "
+                  f"{ms(ss['short_qd_pct']['99']):8.1f}m "
                   f"{ms(ss['long_jct_mean']):8.1f}m "
                   f"{ss['preemptions']:7d} {ss['long_starved_frac']:7.2f}")
     if args.smoke:

@@ -81,8 +81,8 @@ def main() -> None:
     for pol in POLICIES:
         sim = Simulator(make_policy(pol, cc, em))
         s = sim.run(copy.deepcopy(reqs))
-        print(f"{pol:14s} {s['short_qd_pct'][50]:8.3f} "
-              f"{s['short_qd_pct'][99]:9.2f} {s['short_rps']:6.1f} "
+        print(f"{pol:14s} {s['short_qd_pct']['50']:8.3f} "
+              f"{s['short_qd_pct']['99']:9.2f} {s['short_rps']:6.1f} "
               f"{(s['long_jct_mean'] or float('nan')):8.1f} "
               f"{s['long_starved_frac']:8.2f} {s['preemptions']:8d}")
         if args.profile:

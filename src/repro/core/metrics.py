@@ -1,13 +1,38 @@
-"""Metric aggregation matching the paper's reported quantities."""
+"""Metric aggregation matching the paper's reported quantities.
+
+`summarize` is the single summary producer for every backend and every
+harness (simulator sweeps, engine runs, the experiments subsystem, the
+benchmark figures).  Its output is **JSON-stable**: every key is a string,
+every value is a JSON-native scalar/dict/list, so a summary survives a
+``json.dumps``/``loads`` round trip unchanged — the experiments result
+cache and the claims ledger depend on that (tests/test_metrics.py).
+
+Percentile dicts therefore use string keys ("1", "25", ..., "99"); use
+`pct(summary_field, p)` to read one without caring whether the dict came
+straight from `summarize` or through a JSON cache file.
+"""
 from __future__ import annotations
 
-from typing import Dict, List
+import math
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.request import Phase, Request
 
 PCTS = (1, 25, 50, 75, 99)
+
+
+def pct(pct_dict: Optional[Dict], p) -> Optional[float]:
+    """Read percentile `p` from a summary percentile dict (string keys)."""
+    if pct_dict is None:
+        return None
+    return pct_dict[str(p)]
+
+
+def _pct_dict(values: np.ndarray) -> Dict[str, Optional[float]]:
+    return {str(p): float(np.percentile(values, p)) if len(values) else None
+            for p in PCTS}
 
 
 def summarize(policy, t_end: float) -> Dict:
@@ -20,15 +45,16 @@ def summarize(policy, t_end: float) -> Dict:
 
     qd = np.array([r.queueing_delay for r in shorts
                    if r.queueing_delay is not None])
+    short_slow = _slowdowns(policy, short_done)
+    long_slow = _slowdowns(policy, long_done)
     out = {
         "policy": policy.name,
-        "t_end": t_end,
+        "t_end": float(t_end),
         "n_short": len(shorts), "n_long": len(longs),
         "short_completed": len(short_done),
         "long_completed": len(long_done),
         # paper Fig 2/3/9/12: percentile queueing delays of short requests
-        "short_qd_pct": {p: float(np.percentile(qd, p)) if len(qd) else None
-                         for p in PCTS},
+        "short_qd_pct": _pct_dict(qd),
         "short_qd_mean": float(qd.mean()) if len(qd) else None,
         # paper Fig 10/13: short throughput (RPS over the shorts' span —
         # first arrival to last short completion; long-drain tail excluded)
@@ -38,31 +64,140 @@ def summarize(policy, t_end: float) -> Dict:
                           if long_done else None),
         "long_jct_p99": (float(np.percentile([r.jct for r in long_done], 99))
                          if long_done else None),
+        # normalized slowdown = JCT / ideal unloaded service time (cost-model
+        # ideal: dedicated replicas, zero queueing) — the tail-aware metric
+        # that makes 7B and 70B clusters comparable on one axis
+        "short_slowdown_pct": _pct_dict(short_slow),
+        "short_slowdown_mean": (float(short_slow.mean())
+                                if len(short_slow) else None),
+        "long_slowdown_mean": (float(long_slow.mean())
+                               if len(long_slow) else None),
         # paper Table 2: starvation of longs — a long is starved if it never
         # began service while requests were still arriving (the post-trace
         # drain phase would not exist in continuous operation)
-        "long_starved_frac": (np.mean([
+        "long_starved_frac": (float(np.mean([
             r.prefill_start is None or r.prefill_start > last_arrival
-            for r in longs]) if longs else 0.0),
+            for r in longs])) if longs else 0.0),
         # paper Table 3/6: total suspensions of long requests
-        "preemptions": getattr(policy, "preemption_events", 0),
+        "preemptions": int(getattr(policy, "preemption_events", 0)),
         # paper Table 1: GPU idle rate (Eq. 1)
         "gpu_idle_rate": _idle_rate(policy, t_end),
     }
+    per_tenant = _per_tenant(shorts + longs)
+    if per_tenant is not None:
+        out["per_tenant"] = per_tenant
     return out
 
 
 def _short_rps(shorts: List[Request], short_done: List[Request]) -> float:
-    if not short_done:
+    done = [r for r in short_done if r.finish is not None]
+    if not done or not shorts:
         return 0.0
     start = min(r.arrival for r in shorts)
-    end = max(r.finish for r in short_done)
-    return len(short_done) / max(end - start, 1e-9)
+    end = max(r.finish for r in done)
+    return len(done) / max(end - start, 1e-9)
 
 
 def _idle_rate(policy, t_end: float) -> float:
-    if t_end <= 0:
+    replicas = getattr(policy, "replicas", None) or []
+    if t_end <= 0 or not replicas:
         return 0.0
-    total_busy = sum(r.busy_time for r in policy.replicas)
-    total = t_end * len(policy.replicas)
+    total_busy = sum(r.busy_time for r in replicas)
+    total = t_end * len(replicas)
     return max(0.0, 1.0 - total_busy / total)
+
+
+def _ideal_service_time(em, req: Request) -> Optional[float]:
+    """Unloaded service time for one request under the cost model: dedicated
+    replica(s), zero queueing.  Longs get their SP group, shorts one replica."""
+    if em is None:
+        return None
+    if req.is_long:
+        R = em.replicas_needed(req.input_len)
+        t = em.prefill_time(req.input_len, R, sp_mode="fastsp")
+    else:
+        t = em.prefill_time(req.input_len, 1, sp_mode="local")
+    return t + em.decode_time(req.output_len, req.input_len, batch=1)
+
+
+def _slowdowns(policy, done: List[Request]) -> np.ndarray:
+    em = getattr(policy, "em", None)
+    if em is None:
+        return np.array([])
+    vals = []
+    for r in done:
+        if r.jct is None:
+            continue
+        ideal = _ideal_service_time(em, r)
+        if ideal and ideal > 0:
+            vals.append(max(r.jct / ideal, 0.0))
+    return np.array(vals)
+
+
+def _per_tenant(reqs: List[Request]) -> Optional[Dict[str, Dict]]:
+    """Per-tenant breakdown for tagged workloads (multi_tenant scenario);
+    None when no request carries a tenant tag, keeping untagged summaries
+    byte-identical to before."""
+    tenants: Dict[str, List[Request]] = {}
+    for r in reqs:
+        if r.tenant is not None:
+            tenants.setdefault(r.tenant, []).append(r)
+    if not tenants:
+        return None
+    out: Dict[str, Dict] = {}
+    for tenant, rs in sorted(tenants.items()):
+        done = [r for r in rs if r.phase == Phase.DONE and r.finish is not None]
+        qd = np.array([r.queueing_delay for r in rs
+                       if r.queueing_delay is not None])
+        span = (max(r.finish for r in done) - min(r.arrival for r in rs)
+                if done else 0.0)
+        out[tenant] = {
+            "n": len(rs),
+            "completed": len(done),
+            "qd_mean": float(qd.mean()) if len(qd) else None,
+            "qd_pct": _pct_dict(qd),
+            "rps": len(done) / max(span, 1e-9) if done else 0.0,
+            "jct_mean": (float(np.mean([r.jct for r in done]))
+                         if done else None),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cross-seed aggregation (experiments subsystem: per-seed confidence bands)
+# ---------------------------------------------------------------------------
+def ci95(values: Sequence[float]) -> Dict[str, Optional[float]]:
+    """Mean with a normal-approximation 95 % confidence half-width.
+
+    For n == 1 the half-width is 0 (a single seed pins the point estimate,
+    the band collapses); empty input yields all-None."""
+    vals = [v for v in values if v is not None]
+    if not vals:
+        return {"mean": None, "lo": None, "hi": None, "half": None, "n": 0}
+    mean = float(np.mean(vals))
+    if len(vals) == 1:
+        return {"mean": mean, "lo": mean, "hi": mean, "half": 0.0, "n": 1}
+    half = 1.96 * float(np.std(vals, ddof=1)) / math.sqrt(len(vals))
+    return {"mean": mean, "lo": mean - half, "hi": mean + half,
+            "half": half, "n": len(vals)}
+
+
+#: scalar summary fields worth aggregating across seeds
+AGGREGATE_KEYS = ("short_qd_mean", "short_rps", "long_jct_mean",
+                  "long_starved_frac", "preemptions", "gpu_idle_rate",
+                  "short_slowdown_mean", "long_slowdown_mean")
+
+
+def aggregate_seeds(summaries: Iterable[Dict],
+                    keys: Sequence[str] = AGGREGATE_KEYS) -> Dict[str, Dict]:
+    """Aggregate per-seed summaries into {metric: ci95 dict}; percentile
+    dicts aggregate per percentile under '<field>_pct' keys."""
+    summaries = list(summaries)
+    out: Dict[str, Dict] = {k: ci95([s.get(k) for s in summaries])
+                            for k in keys}
+    for field in ("short_qd_pct", "short_slowdown_pct"):
+        if any(field in s for s in summaries):
+            out[field] = {str(p): ci95([s.get(field, {}).get(str(p))
+                                        for s in summaries])
+                          for p in PCTS}
+    return out

@@ -200,6 +200,38 @@ def chat_multiturn(n_requests: int, seed: int, *, arrival_rps: float = 10.0,
     return out
 
 
+@register_scenario("smoke_mini",
+                   "pinned deterministic longs-under-short-pressure smoke "
+                   "trace (claims suite / engine grids)")
+def smoke_mini(n_requests: int, seed: int, *, long_every: int = 7,
+               arrival_gap: float = 0.002, long_input: int = 300_000,
+               long_output: int = 60, short_input_low: int = 300,
+               short_input_high: int = 3000, short_output_low: int = 10,
+               short_output_high: int = 60, **ignored) -> List[Request]:
+    """Fixed-shape mini stress trace: every `long_every`-th request is a
+    300 K-token long arriving amid a steady 2 ms short stream — the regime
+    that forces HOL blocking under FIFO, reservation splits, and repeated
+    preemption under PecSched on a 2-general-replica cluster.  Deterministic
+    under a fixed seed and small enough for real CPU engines, it is the
+    pinned workload the claims regression suite replays on both backends
+    (`repro.experiments`).  Rate/length overrides other harnesses pass to
+    every scenario are accepted-and-ignored: the point of a pinned trace is
+    that nothing recalibrates it."""
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for i in range(n_requests):
+        is_long = i % long_every == 0
+        t += arrival_gap if i else 0.0
+        reqs.append(Request(
+            rid=i, arrival=round(t, 6),
+            input_len=long_input if is_long
+            else int(rng.integers(short_input_low, short_input_high)),
+            output_len=long_output if is_long
+            else int(rng.integers(short_output_low, short_output_high)),
+            is_long=is_long))
+    return reqs
+
+
 @register_scenario("csv", "replay a real Azure-trace-format CSV (path=...)")
 def csv_scenario(n_requests: int, seed: int, *, path: str,
                  **kw) -> List[Request]:

@@ -89,6 +89,11 @@ _CSV_ALIASES = {
     "output": ("generatedtokens", "generated_tokens", "output_len",
                "output_tokens", "completion_tokens", "output"),
 }
+# optional columns (multi-tenant / chat scenarios round-trip through these)
+_CSV_OPTIONAL = {
+    "tenant": ("tenant", "tenantid", "tenant_id", "customer"),
+    "session": ("session", "sessionid", "session_id", "conversation_id"),
+}
 
 
 def _epoch_utc(dt: datetime) -> float:
@@ -131,6 +136,11 @@ def load_trace_csv(path: Union[str, Path], *,
     multiplied by `time_scale` (use < 1 to compress a day-long trace).
     Requests with input_len >= `long_threshold` are flagged long — the §6.2
     resampled traces place longs at >= 100 K tokens.
+
+    Optional Tenant/Session columns (written by `save_trace_csv` for tagged
+    traces) round-trip into `Request.tenant` / `Request.session`; a malformed
+    row raises ValueError naming the file, the 1-based data row, and the
+    offending cell instead of a bare int() traceback.
     """
     with open(path, newline="") as f:
         reader = csv.DictReader(f)
@@ -146,10 +156,28 @@ def load_trace_csv(path: Union[str, Path], *,
                 raise ValueError(
                     f"{path}: no column for {canon!r} "
                     f"(accepted: {aliases}; have {reader.fieldnames})")
-        rows = [(_parse_timestamp(row[cols["timestamp"]]),
-                 int(float(row[cols["input"]])),
-                 int(float(row[cols["output"]])))
-                for row in reader]
+        for canon, aliases in _CSV_OPTIONAL.items():
+            for name in reader.fieldnames:
+                if name.strip().lower() in aliases:
+                    cols[canon] = name
+                    break
+        rows = []
+        for lineno, row in enumerate(reader, start=1):
+            try:
+                ts = _parse_timestamp(row[cols["timestamp"]])
+                inp = int(float(row[cols["input"]]))
+                out = int(float(row[cols["output"]]))
+                session = None
+                if "session" in cols and (row[cols["session"]] or "").strip():
+                    session = int(float(row[cols["session"]]))
+            except (ValueError, TypeError, KeyError) as e:
+                raise ValueError(
+                    f"{path}: malformed row {lineno}: {dict(row)!r} ({e})"
+                ) from e
+            tenant = (row[cols["tenant"]].strip() or None
+                      if "tenant" in cols and row[cols["tenant"]] is not None
+                      else None)
+            rows.append((ts, inp, out, tenant, session))
     if not rows:
         return []
     # sort BEFORE truncating: max_requests means "the earliest N requests",
@@ -160,18 +188,30 @@ def load_trace_csv(path: Union[str, Path], *,
     t0 = rows[0][0]
     return [Request(rid=i, arrival=(t - t0) * time_scale,
                     input_len=max(inp, 1), output_len=max(out, 1),
-                    is_long=inp >= long_threshold)
-            for i, (t, inp, out) in enumerate(rows)]
+                    is_long=inp >= long_threshold,
+                    tenant=tenant, session=session)
+            for i, (t, inp, out, tenant, session) in enumerate(rows)]
 
 
 def save_trace_csv(reqs: List[Request], path: Union[str, Path]) -> None:
     """Write requests in the canonical Azure columns; round-trips with
-    `load_trace_csv` (is_long is re-derived from the length threshold)."""
+    `load_trace_csv` (is_long is re-derived from the length threshold).
+    Tenant/Session columns are appended when any request carries those tags
+    (multi_tenant / chat_multiturn scenarios), so tagged traces survive the
+    round trip too; untagged traces keep the bare 3-column Azure format."""
+    tagged = any(r.tenant is not None or r.session is not None for r in reqs)
     with open(path, "w", newline="") as f:
         w = csv.writer(f)
-        w.writerow(["TIMESTAMP", "ContextTokens", "GeneratedTokens"])
+        header = ["TIMESTAMP", "ContextTokens", "GeneratedTokens"]
+        if tagged:
+            header += ["Tenant", "Session"]
+        w.writerow(header)
         for r in sorted(reqs, key=lambda r: r.arrival):
-            w.writerow([f"{r.arrival:.6f}", r.input_len, r.output_len])
+            row = [f"{r.arrival:.6f}", r.input_len, r.output_len]
+            if tagged:
+                row += [r.tenant or "",
+                        "" if r.session is None else r.session]
+            w.writerow(row)
 
 
 def trace_stats(reqs: List[Request]) -> dict:

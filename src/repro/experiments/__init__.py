@@ -1,0 +1,89 @@
+"""Experiments subsystem: declarative sweeps + claims-as-tests.
+
+The paper's evaluation section (§6) lives here as executable, seeded,
+tolerance-checked artifacts:
+
+* `ExperimentSpec` / `grid`      — declarative policy x scenario x model x
+                                   backend x seed cells (spec.py)
+* `run_sweep` / `run_spec`       — cache-aware, optionally process-parallel
+                                   execution of a spec grid (runner.py)
+* `CLAIMS` / `evaluate_claims`   — the paper's figures/tables as Claim
+                                   objects with direction + tolerance
+                                   (claims.py)
+* `render_markdown`/`write_report` — the claims ledger as markdown and
+                                   claims_report.json (report.py)
+
+`smoke_grid()` below is the canonical reduced grid: the `-m claims` test
+suite, the CI claims-smoke job and `examples/paper_claims.py` all replay
+exactly this grid, so "the claims pass" means the same thing everywhere.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.experiments.claims import (CLAIMS, Claim, ClaimResult,
+                                      eval_claim, evaluate_claims,
+                                      policies_needed, register_claim)
+from repro.experiments.report import (render_markdown, summarize_results,
+                                      write_report)
+from repro.experiments.runner import by_policy, run_spec, run_sweep
+from repro.experiments.spec import (PINNED_SCENARIOS, SCHEMA_VERSION,
+                                    ExperimentSpec, grid)
+
+# canonical smoke-grid shape (kept small: the whole grid must stay well
+# under the 5-minute CI budget on CPU)
+SMOKE_SIM_N = 2500
+SMOKE_SIM_MT_N = 2000
+SMOKE_ENGINE_N = 42
+SMOKE_MODEL = "mistral_7b"
+SMOKE_SEED = 0
+
+
+def smoke_grid() -> List[ExperimentSpec]:
+    """The pinned reduced grid the claims suite replays: every (backend,
+    scenario) cell the registry needs, with the policies its claims read."""
+    specs: List[ExperimentSpec] = []
+    from repro.experiments.claims import claims_for_scenarios
+    for (backend, scenario) in sorted(claims_for_scenarios()):
+        pols = policies_needed(scenario, backend)
+        if backend == "sim":
+            n = SMOKE_SIM_MT_N if scenario == "multi_tenant" else SMOKE_SIM_N
+            specs += grid(pols, scenarios=(scenario,), models=(SMOKE_MODEL,),
+                          backends=("sim",), seeds=(SMOKE_SEED,),
+                          n_requests=n)
+        else:
+            specs += grid(pols, scenarios=("smoke_mini",),
+                          models=(SMOKE_MODEL,), backends=("engine",),
+                          seeds=(SMOKE_SEED,), n_requests=SMOKE_ENGINE_N)
+    # dedupe (several scenarios share policies)
+    seen, out = set(), []
+    for s in specs:
+        if s not in seen:
+            seen.add(s)
+            out.append(s)
+    return out
+
+
+def smoke_sweep_cells(results: Dict[ExperimentSpec, Dict]
+                      ) -> Dict[Tuple[str, str], Dict[str, Dict]]:
+    """Regroup smoke-grid results into the (backend, scenario) cells
+    `evaluate_claims` consumes.  The engine cells run the pinned smoke_mini
+    trace; the registry's azure_default engine claims read that cell — the
+    engine world has exactly one pinned workload.
+
+    Collapsing to (backend, scenario) is only sound for a single-model,
+    single-seed grid (which the smoke grid is); a multi-model or multi-seed
+    result set would mix cells, so it is rejected rather than merged."""
+    cells: Dict[Tuple[str, str], Dict[str, Dict]] = {}
+    for (backend, model, scenario, seed), by_pol in by_policy(results).items():
+        key = (backend, "azure_default" if backend == "engine"
+               and scenario == "smoke_mini" else scenario)
+        cell = cells.setdefault(key, {})
+        dupes = set(cell) & set(by_pol)
+        if dupes:
+            raise ValueError(
+                f"cell {key} would mix runs of {sorted(dupes)} (model "
+                f"{model!r} seed {seed}): evaluate multi-model/seed grids "
+                f"per cell via runner.by_policy instead")
+        cell.update(by_pol)
+    return cells

@@ -1,0 +1,133 @@
+"""metrics.summarize: JSON stability, edge-case guards, slowdown,
+per-tenant breakdowns, and cross-seed aggregation."""
+import copy
+import json
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import (ClusterConfig, ExecutionModel, Simulator,
+                        get_scenario, make_policy)
+from repro.core.metrics import (PCTS, _idle_rate, _short_rps, aggregate_seeds,
+                                ci95, pct, summarize)
+from repro.core.request import Phase, Request
+from repro.configs import get_config, reduced_config
+
+
+@pytest.fixture(scope="module")
+def small_cluster():
+    cfg = reduced_config(get_config("mistral_7b"), layers=2)
+    cc = ClusterConfig(n_nodes=1, gpus_per_node=3, tp=1,
+                       n_short_decode_replicas=1)
+    return cc, ExecutionModel(cfg, cc.replica_spec())
+
+
+@pytest.fixture(scope="module")
+def summary(small_cluster):
+    cc, em = small_cluster
+    reqs = get_scenario("smoke_mini", n_requests=28, seed=0)
+    for r in reqs:                      # tag tenants for the breakdown
+        r.tenant = "chat" if r.rid % 2 else "batch"
+    pol = make_policy("pecsched", cc, em)
+    return Simulator(pol).run(copy.deepcopy(reqs))
+
+
+# ---------------- JSON stability (string keys everywhere) -------------------
+def test_summary_json_round_trip(summary):
+    blob = json.dumps(summary)
+    assert json.loads(blob) == summary
+
+
+def test_percentile_keys_are_strings(summary):
+    for field in ("short_qd_pct", "short_slowdown_pct"):
+        assert set(summary[field]) == {str(p) for p in PCTS}
+    for t in summary["per_tenant"].values():
+        assert set(t["qd_pct"]) == {str(p) for p in PCTS}
+    assert pct(summary["short_qd_pct"], 99) == summary["short_qd_pct"]["99"]
+
+
+# ---------------- slowdown + per-tenant -------------------------------------
+def test_normalized_slowdown_present(summary):
+    assert summary["short_slowdown_mean"] is not None
+    assert summary["short_slowdown_mean"] > 0
+    assert summary["long_slowdown_mean"] is not None
+    assert np.isfinite(summary["long_slowdown_mean"])
+
+
+def test_per_tenant_breakdown(summary):
+    pt = summary["per_tenant"]
+    assert set(pt) == {"chat", "batch"}
+    assert sum(t["n"] for t in pt.values()) == \
+        summary["n_short"] + summary["n_long"]
+    for t in pt.values():
+        assert t["completed"] <= t["n"]
+        assert t["rps"] >= 0.0
+
+
+def test_untagged_summary_has_no_per_tenant(small_cluster):
+    cc, em = small_cluster
+    reqs = get_scenario("smoke_mini", n_requests=10, seed=1)
+    pol = make_policy("fifo", cc, em)
+    s = Simulator(pol).run(copy.deepcopy(reqs))
+    assert "per_tenant" not in s
+
+
+# ---------------- edge-case guards ------------------------------------------
+def test_short_rps_empty_completions():
+    shorts = [Request(rid=0, arrival=0.0, input_len=10, output_len=1)]
+    assert _short_rps(shorts, []) == 0.0
+    assert _short_rps([], []) == 0.0
+
+
+def test_short_rps_ignores_unfinished():
+    r_done = Request(rid=0, arrival=0.0, input_len=10, output_len=1)
+    r_done.phase, r_done.finish = Phase.DONE, 2.0
+    r_half = Request(rid=1, arrival=0.0, input_len=10, output_len=1)
+    r_half.phase = Phase.DONE           # marked done but finish never set
+    assert _short_rps([r_done, r_half], [r_done, r_half]) == \
+        pytest.approx(0.5)
+
+
+def test_idle_rate_zero_replicas():
+    pol = SimpleNamespace(replicas=[])
+    assert _idle_rate(pol, 10.0) == 0.0
+    pol2 = SimpleNamespace(replicas=[SimpleNamespace(busy_time=1.0)])
+    assert _idle_rate(pol2, 0.0) == 0.0
+
+
+def test_summarize_zero_replica_policy():
+    """A policy with no replicas and no completions still summarizes."""
+    pol = SimpleNamespace(name="null", all_requests=[], replicas=[],
+                          sim=None, em=None, preemption_events=0)
+    s = summarize(pol, 0.0)
+    assert s["gpu_idle_rate"] == 0.0 and s["short_rps"] == 0.0
+    assert json.loads(json.dumps(s)) == s
+
+
+# ---------------- cross-seed aggregation ------------------------------------
+def test_ci95_basics():
+    assert ci95([])["mean"] is None
+    one = ci95([3.0])
+    assert one == {"mean": 3.0, "lo": 3.0, "hi": 3.0, "half": 0.0, "n": 1}
+    many = ci95([1.0, 2.0, 3.0])
+    assert many["mean"] == pytest.approx(2.0)
+    assert many["lo"] < 2.0 < many["hi"]
+    assert many["half"] == pytest.approx(1.96 * 1.0 / np.sqrt(3))
+    # None values (metric unavailable for a seed) are dropped, not crashed on
+    assert ci95([1.0, None, 3.0])["n"] == 2
+
+
+def test_aggregate_seeds(small_cluster):
+    cc, em = small_cluster
+    summaries = []
+    for seed in (0, 1):
+        reqs = get_scenario("smoke_mini", n_requests=21, seed=seed)
+        pol = make_policy("pecsched", cc, em)
+        summaries.append(Simulator(pol).run(copy.deepcopy(reqs)))
+    agg = aggregate_seeds(summaries)
+    assert agg["preemptions"]["n"] == 2
+    assert agg["short_rps"]["mean"] > 0
+    assert agg["short_qd_pct"]["99"]["n"] == 2
+    # the aggregate itself stays JSON-stable
+    assert json.loads(json.dumps(agg)) == agg

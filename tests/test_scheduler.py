@@ -64,8 +64,8 @@ def test_preemption_counts_positive(results):
 # ---------------- paper-claim directions -------------------------------------
 def test_fifo_hol_blocking(results):
     """Fig.2: longs inflate short p99 queueing delay under FIFO."""
-    with_l = results["fifo"][0]["short_qd_pct"][99]
-    without = results["fifo_noshort"][0]["short_qd_pct"][99]
+    with_l = results["fifo"][0]["short_qd_pct"]["99"]
+    without = results["fifo_noshort"][0]["short_qd_pct"]["99"]
     assert with_l > 2.0 * max(without, 1e-3)
 
 
@@ -83,9 +83,9 @@ def test_priority_starves_longs(results):
 
 def test_pecsched_protects_shorts(results):
     """Fig.9/12: PecSched short p99 ~ Priority's, far below FIFO's."""
-    pec = results["pecsched"][0]["short_qd_pct"][99]
-    pri = results["priority"][0]["short_qd_pct"][99]
-    fifo = results["fifo"][0]["short_qd_pct"][99]
+    pec = results["pecsched"][0]["short_qd_pct"]["99"]
+    pri = results["priority"][0]["short_qd_pct"]["99"]
+    fifo = results["fifo"][0]["short_qd_pct"]["99"]
     assert pec <= pri + 1.0
     assert pec < 0.25 * fifo
 
@@ -99,8 +99,8 @@ def test_pecsched_serves_longs(results):
 
 def test_ablation_pe_hurts_shorts(results):
     """Fig.12: /PE (no preemption) inflates short p99 vs PecSched."""
-    assert results["pecsched/pe"][0]["short_qd_pct"][99] > \
-        results["pecsched"][0]["short_qd_pct"][99] + 0.5
+    assert results["pecsched/pe"][0]["short_qd_pct"]["99"] > \
+        results["pecsched"][0]["short_qd_pct"]["99"] + 0.5
 
 
 def test_ablation_fsp_hurts_long_jct_and_preempts_more(results):
