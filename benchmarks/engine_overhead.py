@@ -68,7 +68,7 @@ def run(seq_long: int = 96, layers: int = 8) -> Dict:
 
     t0 = time.perf_counter()
     slot = dec.admit(0, st)
-    jax.block_until_ready(dec.cache_k)
+    jax.block_until_ready(dec.kvpool.k)       # pool write = the migration
     t_migrate = time.perf_counter() - t0
 
     out = {

@@ -18,11 +18,22 @@ cost-model estimate (--clock analytic, the cross-backend parity mode).
 Scenario traces carry cluster-scale token counts; the backend maps them to
 engine-sized prompts (log-scaled, bucketed) so every `get_scenario` workload
 runs end-to-end on CPU engines.
+
+Long requests that the policy schedules across multiple replicas with fast
+SP are GANG-scheduled: the replicas map onto a host device mesh and prefill
+runs the real shard_map ring/a2a/allgather kernels (sp/gang.py), so this
+driver forces a multi-device host platform by default (override by setting
+XLA_FLAGS yourself).  --sp-degree caps the gang size, --prefill-target
+controls how eagerly longs claim SP groups.
 """
 import argparse
 import copy
 import dataclasses
+import os
 import time
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
 
 import jax
 
@@ -70,6 +81,13 @@ def main() -> None:
     ap.add_argument("--utilization", type=float, default=1.2,
                     help="arrival rate as a fraction of measured short "
                          "capacity (>1 forces queueing/preemption)")
+    ap.add_argument("--sp-degree", type=int, default=0,
+                    help="cap on the gang-SP degree for long prefills "
+                         "(0 = host device count; 1 = disable gangs)")
+    ap.add_argument("--prefill-target", type=float, default=0.5,
+                    help="prefill latency target (s) driving how many "
+                         "replicas a long claims — tight targets form SP "
+                         "gangs, the paper's §5.3 regime")
     ap.add_argument("--trace-csv", default=None,
                     help="path for --scenario csv")
     ap.add_argument("--compare-sim", action="store_true",
@@ -96,10 +114,13 @@ def main() -> None:
     # it back as general capacity — total engine count is equal either way
     cc = ClusterConfig(n_nodes=1, gpus_per_node=args.engines + 1, tp=1,
                        n_short_decode_replicas=1, max_decode_concurrency=8)
-    em = ExecutionModel(cfg, cc.replica_spec())
+    em = ExecutionModel(cfg, cc.replica_spec(),
+                        target_prefill_s=args.prefill_target)
     backend = EngineBackend(cfg, params, max_len=args.max_len,
                             layers_per_quantum=1, clock=args.clock,
-                            max_new_cap=args.max_new, seed=args.seed)
+                            max_new_cap=args.max_new, seed=args.seed,
+                            enable_sp=args.sp_degree != 1,
+                            sp_degree_cap=max(args.sp_degree, 0))
 
     rps = calibrate_rps(backend, args.engines, args.utilization)
     kw = {"path": args.trace_csv} if args.scenario == "csv" else {}
@@ -107,10 +128,17 @@ def main() -> None:
                         arrival_rps=rps, **kw)
     n_long = sum(r.is_long for r in reqs)
     if not args.smoke:
-        # pre-compile every prompt shape on every engine so measured time is
-        # steady-state compute, not first-policy compilation
+        # pre-compile every prompt shape on every engine (and the gang-SP
+        # runners for the long prompts) so measured time is steady-state
+        # compute, not first-policy compilation
         backend.warmup({backend.prompt_len(r) for r in reqs},
                        range(args.engines + 1))
+        long_lens = {backend.prompt_len(r) for r in reqs if r.is_long}
+        if long_lens:
+            backend.warmup_gang(
+                long_lens,
+                {min(em.replicas_needed(r.input_len), args.engines)
+                 for r in reqs if r.is_long})
     print(f"mini cluster: {args.engines}+1 engines, model {cfg.name}, "
           f"scenario {args.scenario!r}: {len(reqs)} requests ({n_long} long) "
           f"at {rps:.0f} rps, clock={args.clock}")
@@ -126,12 +154,17 @@ def main() -> None:
         wall = time.perf_counter() - t0
         def ms(v):
             return (v if v is not None else float("nan")) * 1e3
+        gangs = backend.stats["gang_prefills"]
+        gang_note = (f"  [gang-SP: {gangs} prefills, "
+                     f"{backend.stats['sp_prefill_quanta']} quanta, "
+                     f"{backend.stats['gang_scatters']} scatters]"
+                     if gangs else "")
         print(f"{pol_name:14s} {s['short_completed']:4d}+{s['long_completed']:d}L "
               f"{ms(s['short_qd_mean']):8.1f}m "
               f"{ms(s['short_qd_pct']['99']):8.1f}m "
               f"{ms(s['long_jct_mean']):8.1f}m "
               f"{s['preemptions']:7d} {s['long_starved_frac']:7.2f} "
-              f"{backend.measured_s:7.2f}s {wall:5.1f}s")
+              f"{backend.measured_s:7.2f}s {wall:5.1f}s{gang_note}")
         if args.compare_sim:
             ps = make_policy(pol_name, cc, em)
             ss = Simulator(ps).run(copy.deepcopy(reqs))
@@ -141,6 +174,12 @@ def main() -> None:
                   f"{ms(ss['short_qd_pct']['99']):8.1f}m "
                   f"{ms(ss['long_jct_mean']):8.1f}m "
                   f"{ss['preemptions']:7d} {ss['long_starved_frac']:7.2f}")
+    timings = backend.sp_per_layer_s()
+    if len(timings) > 1:
+        curve = ", ".join(f"deg{d}: {v * 1e3:.2f}ms/layer"
+                          for d, v in timings.items())
+        print(f"measured SP calibration ({curve}) — feed into the analytic "
+              f"model via backend.calibrate_costmodel(em)")
     if args.smoke:
         print("SMOKE OK")
     else:

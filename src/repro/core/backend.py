@@ -27,6 +27,14 @@ backends implement the protocol:
   tests/test_backends.py relies on this) while still executing every
   command on real engines.
 
+Work protocol: every Work carries, beyond its `kind` (short_prefill,
+short_prefill_coloc, short_decode[_inplace], short_full, long_prefill,
+long_decode, long_full), the `sp_mode` the policy planned it with —
+"local", "ring", or "fastsp".  SimBackend ignores it (the mode is already
+priced into `duration`); EngineBackend gang-schedules a multi-replica
+``long_prefill`` with sp_mode="fastsp" onto a real shard_map SP mesh
+(§5.3) and runs everything else single-replica.
+
 The split means every `make_policy` name and every `get_scenario` workload
 runs on both worlds with zero per-policy glue.
 """

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional
+from typing import Dict, Optional
 
 from repro.configs.base import ModelConfig
 from repro.sp.planner import (TPU_V5E, A100_40G, HardwareSpec, plan_fast_sp,
@@ -54,6 +54,37 @@ class ExecutionModel:
                                 * cfg.ssm_state * 4)
         else:
             self.state_bytes = 0.0
+        #: degree -> measured fast-SP speedup vs single replica (see
+        #: calibrate_sp); empty = use the planner's closed-form estimate
+        self._sp_speedup: Dict[int, float] = {}
+
+    # ------------------------------------------------------------------
+    def calibrate_sp(self, per_layer_s: Dict[int, float]) -> None:
+        """Calibrate the analytic fast-SP mode from ENGINE-measured
+        per-layer prefill times (`EngineBackend.sp_per_layer_s`): key 1 is
+        the single-replica path, key N the gang of degree N.  Only the
+        *relative* speedup is stored, so engine-scale measurements apply to
+        cluster-scale estimates — afterwards `prefill_time(sp_mode="fastsp")`
+        scales the single-replica roofline by the measured curve instead of
+        the planner's closed-form overlap model, making SimBackend price SP
+        the way the engines actually ran it (same predicted winner)."""
+        base = per_layer_s.get(1)
+        if not base:
+            return
+        self._sp_speedup = {int(d): base / t
+                            for d, t in per_layer_s.items()
+                            if int(d) >= 2 and t > 0}
+
+    def sp_speedup(self, n_replicas: int) -> Optional[float]:
+        """Calibrated speedup at a degree; degrees never measured scale by
+        the per-device efficiency of the nearest measured one."""
+        if not self._sp_speedup or n_replicas < 2:
+            return None
+        hit = self._sp_speedup.get(n_replicas)
+        if hit is not None:
+            return hit
+        d = min(self._sp_speedup, key=lambda k: abs(k - n_replicas))
+        return self._sp_speedup[d] * n_replicas / d
 
     # ------------------------------------------------------------------
     def flops_per_token(self, context_len: int) -> float:
@@ -117,8 +148,15 @@ class ExecutionModel:
             mxu_eff = max(seg / (seg + 65536.0), 0.60)   # gap capped at ~1.7x
             hop = ring_hop_time(self.cfg, seg, self.hw) * self.cfg.num_layers
             return t_comp / mxu_eff + (n_replicas - 1) * hop * 0.5
-        # fastsp: inner A2A/allgather keeps MXU busy on full segments;
-        # planner estimates per-layer comm that overlaps ~all but one hop
+        # fastsp: measured calibration wins when present (engines fed their
+        # per-degree timings back through calibrate_sp) ...
+        speedup = self.sp_speedup(n_replicas)
+        if speedup is not None:
+            t1 = self.prefill_time(input_len, 1, sp_mode="local",
+                                   batch_extra_tokens=batch_extra_tokens)
+            return t1 / max(speedup, 1e-6)
+        # ... else the planner's closed form: inner A2A/allgather keeps MXU
+        # busy on full segments; per-layer comm overlaps ~all but one hop
         plan = plan_fast_sp(self.cfg, input_len, n_nodes=n_replicas,
                             gpus_per_node=self.replica.tp, tp=self.replica.tp,
                             hw=self.hw)

@@ -83,9 +83,11 @@ class BasePolicy:
 
     # ------------------------------------------------------------------
     def _start(self, t: float, kind: str, reqs: List[Request],
-               rep_ids: List[int], duration: float, *, colocated=False) -> Work:
+               rep_ids: List[int], duration: float, *, colocated=False,
+               sp_mode: str = "local") -> Work:
         w = Work(wid=next(self._wid), kind=kind, replica_ids=rep_ids,
-                 requests=reqs, start=t, duration=duration, colocated=colocated)
+                 requests=reqs, start=t, duration=duration, colocated=colocated,
+                 sp_mode=sp_mode)
         for rid in rep_ids:
             rep = self.replicas[rid]
             if colocated:
@@ -182,7 +184,8 @@ class FIFOPolicy(BasePolicy):
              + self.em.decode_time(req.output_len, req.input_len, batch=1))
         req.phase = Phase.PREFILL
         req.prefill_start = t
-        self._start(t, "long_full", [req], [r.rid for r in reps], d)
+        self._start(t, "long_full", [req], [r.rid for r in reps], d,
+                    sp_mode="ring")
 
     def dispatch(self, t):
         while self.queue:
@@ -315,6 +318,7 @@ class LongState:
     paused: bool = False
     remaining: float = 0.0              # seconds of work left when paused
     decode_remaining: float = 0.0
+    sp_mode: str = "ring"               # SP mode its prefill runs under
 
 
 class PecSchedPolicy(BasePolicy):
@@ -492,7 +496,8 @@ class PecSchedPolicy(BasePolicy):
         st.paused = False
         if st.phase == "prefill":
             st.req.phase = Phase.PREFILL
-            self._start(t, "long_prefill", [st.req], st.rep_ids, st.remaining)
+            self._start(t, "long_prefill", [st.req], st.rep_ids, st.remaining,
+                        sp_mode=st.sp_mode)
         else:
             st.req.phase = Phase.DECODE
             self._start(t, "long_decode", [st.req], st.rep_ids,
@@ -536,9 +541,10 @@ class PecSchedPolicy(BasePolicy):
             d = self.em.prefill_time(head.input_len, R, sp_mode=sp)
             head.phase = Phase.PREFILL
             head.prefill_start = t
-            st = LongState(req=head, rep_ids=[r.rid for r in claimed])
+            st = LongState(req=head, rep_ids=[r.rid for r in claimed],
+                           sp_mode=sp)
             self.longs[head.rid] = st
-            self._start(t, "long_prefill", [head], st.rep_ids, d)
+            self._start(t, "long_prefill", [head], st.rep_ids, d, sp_mode=sp)
 
     def _dispatch_shorts(self, t):
         while self.short_queue:

@@ -140,6 +140,12 @@ class Work:
     duration: float
     colocated: bool = False
     canceled: bool = False
+    #: SP mode the policy planned this Work with ("local" | "ring" |
+    #: "fastsp").  Analytic backends already priced it into `duration`;
+    #: the engine backend uses it to decide whether a multi-replica
+    #: long_prefill executes as a gang-scheduled shard_map SP prefill
+    #: (fastsp) or on a single replica (ring/local).
+    sp_mode: str = "local"
 
     @property
     def end(self) -> float:

@@ -45,6 +45,11 @@ _ENGINE_STACKS: Dict[Tuple[str, str], Tuple] = {}
 
 ENGINE_LAYERS = 2
 ENGINE_MAX_LEN = 128
+#: engine-scale prefill latency target: tight enough that a 300K-token long
+#: needs an SP group (replicas_needed >= 2) on the reduced model, so the
+#: engine cells exercise the gang-scheduling path (multi-replica claim +
+#: fast-SP pricing; real shard_map gangs whenever the host has the devices)
+ENGINE_TARGET_PREFILL_S = 0.5
 
 
 def short_capacity(model: str) -> float:
@@ -60,7 +65,8 @@ def engine_cluster(cfg) -> Tuple[ClusterConfig, ExecutionModel]:
     replicas + 1 dedicated short-decode replica (tests/test_backends.py)."""
     cc = ClusterConfig(n_nodes=1, gpus_per_node=3, tp=1,
                        n_short_decode_replicas=1, max_decode_concurrency=8)
-    return cc, ExecutionModel(cfg, cc.replica_spec())
+    return cc, ExecutionModel(cfg, cc.replica_spec(),
+                              target_prefill_s=ENGINE_TARGET_PREFILL_S)
 
 
 def engine_stack(model: str, clock: str):

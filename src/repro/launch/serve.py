@@ -27,6 +27,12 @@ def main() -> None:
     ap.add_argument("--policy", default="pecsched", choices=POLICY_NAMES)
     ap.add_argument("--n", type=int, default=24)
     ap.add_argument("--engines", type=int, default=2)
+    ap.add_argument("--sp-degree", type=int, default=0,
+                    help="gang-SP degree cap for long prefills "
+                         "(0 = host device count; 1 = disable gangs)")
+    ap.add_argument("--prefill-target", type=float, default=15.0,
+                    help="prefill latency target (s); tight targets make "
+                         "longs claim SP groups the backend gang-schedules")
     args = ap.parse_args()
 
     base = get_config(args.arch)
@@ -38,7 +44,9 @@ def main() -> None:
                               dtype="float32", sliding_window=0)
     params = init_params(jax.random.PRNGKey(0), cfg)
     mc = MiniCluster(cfg, params, n_engines=args.engines, policy=args.policy,
-                     max_len=128)
+                     max_len=128, enable_sp=args.sp_degree != 1,
+                     sp_degree_cap=max(args.sp_degree, 0),
+                     target_prefill_s=args.prefill_target)
     rng = np.random.default_rng(0)
     t = 0.0
     for i in range(args.n):

@@ -83,11 +83,16 @@ def attention_block(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
                     write_cache: bool = False,
                     cross_kv: Optional[KVCache] = None,
                     cross_len: Optional[jax.Array] = None,
-                    impl: str = "auto"):
+                    impl: str = "auto", attn_fn=None):
     """Full-sequence attention (train/prefill). x (B, S, d).
 
     write_cache: also return a KVCache holding the projected K/V (prefill).
     cross_kv: if given, attend to it instead of self K/V (cross-attention).
+    attn_fn: replace the core attention(qh, kh, vh) with a custom kernel —
+    e.g. the gang-SP hybrid running inside shard_map (sp/gang.py), which
+    keeps the rest of the layer (projections, RoPE, residuals) shared with
+    the single-replica path instead of forked.  Called as
+    ``attn_fn(qh, kh, vh, causal=..., sliding_window=...)``.
     """
     B, S, d = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -114,8 +119,12 @@ def attention_block(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
     vh = constrain_first(v.transpose(0, 2, 1, 3),
                          ("batch", "kv_heads", None, None),
                          ("batch", None, None, None))
-    o = ops.attention(qh, kh, vh, causal=causal, sliding_window=sliding_window,
-                      kv_len=kv_len, impl=impl)
+    if attn_fn is None:
+        o = ops.attention(qh, kh, vh, causal=causal,
+                          sliding_window=sliding_window, kv_len=kv_len,
+                          impl=impl)
+    else:
+        o = attn_fn(qh, kh, vh, causal=causal, sliding_window=sliding_window)
     o = o.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
     out = linear(o, p["wo"])
     out = constrain(out, "batch", None, None)

@@ -100,10 +100,11 @@ def init_params(rng: jax.Array, cfg: ModelConfig) -> Params:
 # ===========================================================================
 # Full-sequence forward (train / prefill)
 # ===========================================================================
-def _dense_layer(cfg, pl, x, positions, *, sliding_window, impl, write_cache):
+def _dense_layer(cfg, pl, x, positions, *, sliding_window, impl, write_cache,
+                 attn_fn=None):
     h = L.attention_block(cfg, pl["attn"], L.rms_norm(x, pl["ln1"], cfg.norm_eps),
                           positions, sliding_window=sliding_window,
-                          write_cache=write_cache, impl=impl)
+                          write_cache=write_cache, impl=impl, attn_fn=attn_fn)
     if write_cache:
         h, kv = h
     x = x + h

@@ -1,3 +1,10 @@
+"""Real-execution serving stack.
+
+`PagedKVCache` is the ONE KV storage path of the stack (it used to be an
+orphaned export): every `ReplicaEngine` owns one as its pool, and admit
+(§5.2 migration), gang-SP scatter (§5.3), decode-time token appends and
+preemption eviction all move KV through its block tables.
+"""
 from repro.serving.backend import EngineBackend
 from repro.serving.cluster import MiniCluster, ServeRequest
 from repro.serving.engine import PrefillState, ReplicaEngine, SlotsFull

@@ -16,6 +16,24 @@ on genuine `ReplicaEngine`s:
   decode is slot-chunked, so a burst larger than `max_slots` waits for
   evictions instead of crashing (`SlotsFull`).
 
+Gang-scheduled fast SP (§5.3, the paper's third technique — live): when a
+policy starts a multi-replica ``long_prefill`` with ``sp_mode="fastsp"``,
+the backend *gangs* the group — it maps the claimed replicas onto a
+(ring, sp) device mesh (`sp/gang.py`), runs the actual shard_map hybrid-SP
+kernels (outer ring attention, inner a2a/allgather per the planner's
+`SPPlan.inner_impl`) quantum by quantum with preemption points in between,
+and on completion scatters the sequence-sharded KV back into the home
+replica's paged pool (`ReplicaEngine.scatter_kv`), where decode picks it
+up block-granularly.  A gang quantum covers ``layers_per_quantum x degree``
+layers at equal per-device compute, so the prefill completes in ~degree x
+fewer engine quanta — the mechanism by which fast SP shrinks the
+preemption window.  Per-degree measured per-layer timings accumulate in
+``sp_timings`` and can be fed back into the analytic cost model via
+`calibrate_costmodel`, so SimBackend and EngineBackend predict the same
+winner.  On hosts with fewer devices than the gang (tier-1 CI sees ONE),
+`gang_degree` collapses to 1 and the long runs the single-replica path —
+``sp_mode="ring"`` (the /FSP ablation and all baselines) always does.
+
 Two virtual-clock modes:
 
 * ``clock="measured"`` (default): completion times are the *measured* JAX
@@ -31,18 +49,13 @@ are CPU-sized.  Unless a `token_provider` supplies actual prompts (the
 MiniCluster path), prompts are synthesized deterministically per rid with a
 log-scaled, bucketed length so relative ordering (longs >> shorts) survives
 while jit recompiles stay bounded.
-
-A multi-replica long group (ring/fast SP in the analytic world) executes on
-the group's first engine; the policy's bookkeeping keeps the whole group
-busy, which preserves the *scheduling* semantics (that is what this backend
-is for — kernel-level SP lives in repro/sp/).
 """
 from __future__ import annotations
 
 import math
 import time
 from collections import Counter, deque
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +66,8 @@ from repro.core.backend import ExecutionBackend
 from repro.core.request import Request
 from repro.core.simulator import Work
 from repro.serving.engine import PrefillState, ReplicaEngine, SlotsFull
+from repro.sp.gang import (GangPrefillState, GangSPRunner, gang_degree,
+                           make_gang_mesh, plan_for_gang)
 
 # kinds that no policy ever cancels: execute eagerly at submit time
 _EAGER_KINDS = ("short_prefill", "short_prefill_coloc", "short_decode",
@@ -71,7 +86,8 @@ class EngineBackend(ExecutionBackend):
                  clock: str = "measured", max_new_cap: int = 4,
                  token_provider: Optional[Callable[[Request],
                                                    Optional[np.ndarray]]] = None,
-                 seed: int = 0):
+                 seed: int = 0, enable_sp: bool = True,
+                 sp_degree_cap: int = 0):
         assert clock in ("measured", "analytic"), clock
         self.cfg = cfg
         self.params = params
@@ -82,29 +98,41 @@ class EngineBackend(ExecutionBackend):
         self.max_new_cap = max_new_cap
         self.token_provider = token_provider
         self.seed = seed
+        self.enable_sp = enable_sp
+        self.sp_degree_cap = sp_degree_cap
         self.needs_finish = clock == "analytic"
         self.max_prompt = max(4, max_len - min(max_new_cap, 32) - 1)
         self._buckets = [b for b in _BUCKETS if b <= self.max_prompt]
         self._engines: Dict[int, ReplicaEngine] = {}      # replica rid -> engine
         self._tokens: Dict[int, np.ndarray] = {}          # request rid -> prompt
         self._psessions: Dict[int, PrefillState] = {}     # in-flight prefills
+        self._gangs: Dict[int, GangPrefillState] = {}     # in-flight gang SP
         self._dsessions: Dict[int, Dict] = {}             # in-flight long decodes
         self._kv: Dict[int, PrefillState] = {}            # prefilled, not decoded
+        self._resident: Dict[int, int] = {}               # gang rid -> home replica
+        self._parked_scatter: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._gang_runners: Dict[Tuple[int, str], GangSPRunner] = {}
         self.generated: Dict[int, List[int]] = {}         # request rid -> tokens
         self.stats = Counter()
         self.measured_s = 0.0
+        #: degree -> measured seconds per layer (1 = single-replica path);
+        #: accumulates across reset() like the engines' jit caches, so a
+        #: sweep's calibration sees every run
+        self.sp_timings: Dict[int, List[float]] = {}
 
     # ------------------------------------------------------------------
     def reset(self) -> None:
-        """Clear per-run state; engines (and their jit caches) survive so a
-        policy sweep pays compilation once."""
+        """Clear per-run state; engines (and their jit caches), gang runners
+        and sp_timings survive so a policy sweep pays compilation once."""
         for eng in self._engines.values():
-            for slot in range(eng.max_slots):
-                eng.evict(slot)
+            eng.clear()
         self._tokens.clear()
         self._psessions.clear()
+        self._gangs.clear()
         self._dsessions.clear()
         self._kv.clear()
+        self._resident.clear()
+        self._parked_scatter.clear()
         self.generated.clear()
         self.stats = Counter()
         self.measured_s = 0.0
@@ -133,6 +161,28 @@ class EngineBackend(ExecutionBackend):
                 slot = eng.admit(-1, st)
                 eng.decode_iteration({slot: 0})
                 eng.evict(slot)
+
+    def warmup_gang(self, lengths, degrees, *,
+                    cluster_input_len: int = 300_000) -> None:
+        """Pre-compile the gang-SP runners (embed, every quantum slice,
+        logits) for the given engine-side prompt lengths and gang degrees,
+        with the inner strategy the planner picks at `cluster_input_len` —
+        the gang counterpart of `warmup`, keeping shard_map compilation out
+        of the measured clock and out of the `sp_timings` calibration
+        samples."""
+        for requested in sorted(set(degrees)):
+            degree = gang_degree(requested, cap=self.sp_degree_cap)
+            if degree < 2:
+                continue
+            mesh = make_gang_mesh(degree, self.cfg.num_heads)
+            plan = plan_for_gang(self.cfg, cluster_input_len, mesh)
+            runner = self._runner_for(degree, plan.inner_impl)
+            for n in sorted(set(lengths)):
+                st = runner.start(-1, np.zeros(int(n), np.int32), plan)
+                done = False
+                while not done:
+                    st, done = runner.quantum(st, self.lpq * degree)
+                runner.logits(st)
 
     def _engine(self, rid: int) -> ReplicaEngine:
         eng = self._engines.get(rid)
@@ -189,12 +239,18 @@ class EngineBackend(ExecutionBackend):
         return st
 
     def _prefill_quanta(self, eng: ReplicaEngine, st: PrefillState,
-                        target_layer: int) -> float:
+                        target_layer: int, record: bool = False) -> float:
         dt = 0.0
         while st.layer < target_layer:
+            lo = st.layer
             (_, _done), d = self._timed(eng.prefill_quantum, st)
             dt += d
             self.stats["prefill_quanta"] += 1
+            # degree-1 timings feed the SP calibration only for LONG
+            # prefills: their prompt bucket matches what gangs execute, so
+            # the speedup curve compares like with like
+            if record and st.layer > lo:
+                self.sp_timings.setdefault(1, []).append(d / (st.layer - lo))
         return dt
 
     def _complete_prefill(self, eng: ReplicaEngine, req: Request) -> float:
@@ -202,13 +258,93 @@ class EngineBackend(ExecutionBackend):
         st = self._psessions.pop(req.rid, None)
         if st is None:
             st = self._start_prefill(eng, req)
-        dt = self._prefill_quanta(eng, st, self.cfg.num_layers)
+        dt = self._prefill_quanta(eng, st, self.cfg.num_layers,
+                                  record=req.is_long)
         logits, d = self._timed(eng.prefill_logits, st)
         dt += d
         self.generated[req.rid] = [int(jnp.argmax(logits[0]))]
         self._kv[req.rid] = st
         return dt
 
+    # ---- gang-scheduled SP prefill (§5.3) ----------------------------
+    def _gang_degree_for(self, work: Work) -> int:
+        if not self.enable_sp or work.sp_mode != "fastsp":
+            return 1
+        return gang_degree(len(work.replica_ids), cap=self.sp_degree_cap)
+
+    def _runner_for(self, degree: int, strategy: str) -> GangSPRunner:
+        key = (degree, strategy)
+        r = self._gang_runners.get(key)
+        if r is None:
+            mesh = make_gang_mesh(degree, self.cfg.num_heads)
+            r = GangSPRunner(self.cfg, self.params, mesh, strategy)
+            self._gang_runners[key] = r
+        return r
+
+    def _start_gang(self, req: Request, degree: int) -> GangPrefillState:
+        mesh = make_gang_mesh(degree, self.cfg.num_heads)
+        # strategy choice reflects the CLUSTER-scale request length — the
+        # planner's four-combination search (§5.3), not the scale prompt
+        plan = plan_for_gang(self.cfg, req.input_len, mesh)
+        runner = self._runner_for(degree, plan.inner_impl)
+        st, _ = self._timed(runner.start, req.rid, self._prompt(req), plan)
+        self.stats["gang_prefills"] += 1
+        return st
+
+    def _gang_quantum(self, st: GangPrefillState) -> Tuple[bool, float]:
+        """One SP quantum: lpq x degree layers at equal per-device compute."""
+        runner = self._runner_for(st.degree, st.plan.inner_impl)
+        lo = st.layer
+        (_, done), d = self._timed(runner.quantum, st, self.lpq * st.degree)
+        self.stats["sp_prefill_quanta"] += 1
+        if st.layer > lo:
+            self.sp_timings.setdefault(st.degree, []).append(
+                d / (st.layer - lo))
+        return done, d
+
+    def _finish_gang(self, work: Work) -> float:
+        """Remaining gang quanta + first-token logits + KV scatter back to
+        the home replica's paged pool."""
+        req = work.requests[0]
+        st = self._gangs[req.rid]
+        runner = self._runner_for(st.degree, st.plan.inner_impl)
+        dt = 0.0
+        while st.layer < self.cfg.num_layers:
+            _, d = self._gang_quantum(st)
+            dt += d
+        logits, d = self._timed(runner.logits, st)
+        dt += d
+        self.generated[req.rid] = [int(jnp.argmax(logits[0]))]
+        k, v = runner.gather_kv(st)
+        del self._gangs[req.rid]
+        home = work.replica_ids[0]
+        try:
+            self._engine(home).scatter_kv(req.rid, jnp.asarray(k),
+                                          jnp.asarray(v))
+            self._resident[req.rid] = home
+            self.stats["gang_scatters"] += 1
+        except SlotsFull:
+            # home pool momentarily out of blocks: park host-side, the
+            # scatter retries when the decode phase binds a slot
+            self._parked_scatter[req.rid] = (k, v)
+            self.stats["gang_scatter_deferred"] += 1
+        return dt
+
+    def sp_per_layer_s(self) -> Dict[int, float]:
+        """Median measured seconds/layer per SP degree (1 = no gang)."""
+        return {d: float(np.median(v))
+                for d, v in sorted(self.sp_timings.items()) if v}
+
+    def calibrate_costmodel(self, em) -> Dict[int, float]:
+        """Feed measured per-degree SP timings into the analytic model
+        (`ExecutionModel.calibrate_sp`) so both backends price fast-SP
+        prefill from the same curve."""
+        m = self.sp_per_layer_s()
+        if m:
+            em.calibrate_sp(m)
+        return m
+
+    # ---- decode -------------------------------------------------------
     def _decode_batch(self, eng: ReplicaEngine, reqs: List[Request]) -> float:
         """Admit each request's parked KV and decode to its target length,
         chunked by free slots: a burst larger than the slot count waits for
@@ -250,6 +386,38 @@ class EngineBackend(ExecutionBackend):
                 eng.evict(s)
         return dt
 
+    def _bind_long_decode(self, req: Request, work_rid: int) -> None:
+        """Install the long's decode session from whichever KV path its
+        prefill took: parked PrefillState (single-replica), pool-resident
+        blocks (gang scatter) or a deferred host-side scatter.  State is
+        only consumed AFTER the step that needs it succeeds, so a SlotsFull
+        here leaves everything in place for a retried submit.  The session
+        remembers which engine holds the KV (`home`): for a gang long that
+        is the scatter target, which need not be the decode work's first
+        replica under every policy."""
+        if req.rid in self._kv:
+            eng = self._engine(work_rid)
+            slot = eng.admit(req.rid, self._kv[req.rid])
+            del self._kv[req.rid]
+            self.stats["kv_migrations"] += 1
+            home = work_rid
+        else:
+            if req.rid in self._parked_scatter:
+                k, v = self._parked_scatter[req.rid]
+                eng = self._engine(work_rid)
+                eng.scatter_kv(req.rid, jnp.asarray(k), jnp.asarray(v))
+                del self._parked_scatter[req.rid]
+                self._resident[req.rid] = work_rid
+            if req.rid not in self._resident:
+                return                       # prefill never ran (defensive)
+            home = self._resident[req.rid]
+            slot = self._engine(home).bind_slot(req.rid)
+            del self._resident[req.rid]
+        self._dsessions[req.rid] = {
+            "slot": slot, "home": home,
+            "last": self.generated[req.rid][-1],
+            "remaining": self._target_new(req) - 1}
+
     # ---- eager kinds --------------------------------------------------
     def _execute(self, work: Work) -> float:
         eng = self._engine(work.replica_ids[0])
@@ -285,15 +453,18 @@ class EngineBackend(ExecutionBackend):
         req = work.requests[0]
         eng = self._engine(work.replica_ids[0])
         if work.kind == "long_prefill":
-            if req.rid not in self._psessions and req.rid not in self._kv:
-                self._psessions[req.rid] = self._start_prefill(eng, req)
+            degree = self._gang_degree_for(work)
+            started = (req.rid in self._psessions or req.rid in self._gangs
+                       or req.rid in self._kv or req.rid in self._resident
+                       or req.rid in self._parked_scatter)
+            if not started:
+                if degree >= 2:
+                    self._gangs[req.rid] = self._start_gang(req, degree)
+                else:
+                    self._psessions[req.rid] = self._start_prefill(eng, req)
         else:                               # long_decode
-            if req.rid not in self._dsessions and req.rid in self._kv:
-                slot = eng.admit(req.rid, self._kv.pop(req.rid))
-                self.stats["kv_migrations"] += 1
-                self._dsessions[req.rid] = {
-                    "slot": slot, "last": self.generated[req.rid][-1],
-                    "remaining": self._target_new(req) - 1}
+            if req.rid not in self._dsessions:
+                self._bind_long_decode(req, work.replica_ids[0])
         if self.clock == "analytic":
             self.sim.push(t + work.duration, "DONE", work)
         else:
@@ -321,14 +492,21 @@ class EngineBackend(ExecutionBackend):
             eng = self._engine(work.replica_ids[0])
             if work.kind == "long_prefill":
                 st = self._psessions.get(req.rid)
+                gst = self._gangs.get(req.rid)
                 if st is not None:
                     left = self.cfg.num_layers - st.layer
                     self._prefill_quanta(eng, st,
-                                         st.layer + int(frac * left))
+                                         st.layer + int(frac * left),
+                                         record=True)
+                elif gst is not None:
+                    left = self.cfg.num_layers - gst.layer
+                    target = gst.layer + int(frac * left)
+                    while gst.layer < target:
+                        self._gang_quantum(gst)
             elif work.kind == "long_decode":
                 sess = self._dsessions.get(req.rid)
                 if sess is not None:
-                    self._decode_steps(eng, req, sess,
+                    self._decode_steps(self._engine(sess["home"]), req, sess,
                                        int(frac * sess["remaining"]))
         return ok
 
@@ -352,14 +530,29 @@ class EngineBackend(ExecutionBackend):
         req = work.requests[0]
         eng = self._engine(work.replica_ids[0])
         if work.kind == "long_prefill":
+            gst = self._gangs.get(req.rid)
+            if gst is not None:
+                done, d = ((True, 0.0) if gst.layer >= self.cfg.num_layers
+                           else self._gang_quantum(gst))
+                if not done:
+                    self.sim.push(t + d, "ENGINE_STEP", work)
+                    return
+                d += self._finish_gang(work)
+                work.duration = t + d - work.start
+                self.sim.push(t + d, "DONE", work)
+                return
             st = self._psessions.get(req.rid)
             if st is None:                  # finished before a late preemption
                 work.duration = max(t - work.start, 0.0)
                 self.sim.push(t, "DONE", work)
                 return
             if st.layer < self.cfg.num_layers:
+                lo = st.layer
                 (_, done), d = self._timed(eng.prefill_quantum, st)
                 self.stats["prefill_quanta"] += 1
+                if st.layer > lo:          # a long on the single-replica path
+                    self.sp_timings.setdefault(1, []).append(
+                        d / (st.layer - lo))
             else:
                 done, d = True, 0.0
             if not done:
@@ -374,11 +567,12 @@ class EngineBackend(ExecutionBackend):
             sess = self._dsessions.get(req.rid)
             if sess is None or sess["remaining"] <= 0:
                 if sess is not None:
-                    eng.evict(sess["slot"])
+                    self._engine(sess["home"]).evict(sess["slot"])
                     del self._dsessions[req.rid]
                 work.duration = max(t - work.start, 0.0)
                 self.sim.push(t, "DONE", work)
                 return
+            eng = self._engine(sess["home"])
             d = self._decode_steps(eng, req, sess, 1)
             if sess["remaining"] <= 0:
                 eng.evict(sess["slot"])
@@ -392,12 +586,16 @@ class EngineBackend(ExecutionBackend):
     def finish(self, t: float, work: Work) -> None:
         if work.kind == "long_prefill":
             req = work.requests[0]
-            if req.rid not in self._kv:     # run whatever layers remain
+            if req.rid in self._gangs:
+                self._finish_gang(work)
+            elif (req.rid not in self._kv and req.rid not in self._resident
+                    and req.rid not in self._parked_scatter):
+                # run whatever layers remain on the single-replica path
                 self._complete_prefill(self._engine(work.replica_ids[0]), req)
         elif work.kind == "long_decode":
             req = work.requests[0]
             sess = self._dsessions.pop(req.rid, None)
             if sess is not None:
-                eng = self._engine(work.replica_ids[0])
+                eng = self._engine(sess["home"])
                 self._decode_steps(eng, req, sess, sess["remaining"])
                 eng.evict(sess["slot"])

@@ -58,7 +58,9 @@ class MiniCluster:
     def __init__(self, cfg: ModelConfig, params, *, n_engines: int = 2,
                  policy: str = "pecsched", max_len: int = 512,
                  long_threshold: int = 128, layers_per_quantum: int = 2,
-                 clock: str = "measured", seed: int = 0):
+                 clock: str = "measured", seed: int = 0,
+                 enable_sp: bool = True, sp_degree_cap: int = 0,
+                 target_prefill_s: float = 15.0):
         self.cfg = cfg
         self.policy = policy
         self.long_threshold = long_threshold
@@ -69,13 +71,17 @@ class MiniCluster:
             max_batch_tokens=max(2 * max_len, 256),
             max_coloc_tokens=max_len,
             max_decode_concurrency=8)
-        self.em = ExecutionModel(cfg, self.cc.replica_spec())
+        # a tight target_prefill_s makes longs claim SP groups, which the
+        # backend gang-schedules over the host device mesh when it can
+        self.em = ExecutionModel(cfg, self.cc.replica_spec(),
+                                 target_prefill_s=target_prefill_s)
         self._tok: Dict[int, np.ndarray] = {}
         self.backend = EngineBackend(
             cfg, params, max_len=max_len,
             layers_per_quantum=layers_per_quantum, clock=clock,
             max_new_cap=1 << 30,                   # honor each max_new exactly
-            token_provider=lambda r: self._tok.get(r.rid), seed=seed)
+            token_provider=lambda r: self._tok.get(r.rid), seed=seed,
+            enable_sp=enable_sp, sp_degree_cap=sp_degree_cap)
         self._pending: List[ServeRequest] = []
         self.done: List[ServeRequest] = []
         self.summary: Dict = {}

@@ -5,13 +5,22 @@ preemption state ("KV of completed layers + one layer's intermediate data")
 is exactly what PrefillState holds. A preempted prefill resumes from its
 layer index with bit-identical results (asserted in tests).
 
+KV storage is block-granular: every resident request's KV lives in the
+replica's `PagedKVCache` (serving/kvcache.py), whether it arrived through
+`admit` (a finished local prefill, §5.2 migration), `scatter_kv` (a gang-SP
+prefill scattering its sharded KV back to the home replica) or grows token
+by token during decode.  Decode slots are thin identities over the pool: a
+slot binds a rid into the batched decode step; the dense (L, slots, KV,
+S_max, hd) view the jitted decode kernel consumes is gathered from the pool
+per iteration, and the new token's KV is appended back block-granularly —
+one KV path for gang scatter, preemption eviction and decode alike.
+
 The engine targets the dense family (the paper's evaluation models are all
 dense); decode runs slot-batched with per-slot cache lengths — continuous
 batching at the iteration level.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -21,16 +30,17 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import model as mdl
-from repro.models.layers import KVCache
+from repro.serving.kvcache import PagedKVCache
 
 
 class SlotsFull(RuntimeError):
-    """All decode slots of a ReplicaEngine are occupied.
+    """A ReplicaEngine cannot admit another resident request.
 
-    Raised by `admit` instead of the bare IndexError the empty free-slot
-    list used to produce; callers (EngineBackend's slot-chunked decode, the
-    decode-queue drain) catch it and wait for an eviction rather than
-    crashing the serving loop.
+    Raised consistently for BOTH exhaustion modes — no free decode slot, or
+    not enough free KV blocks in the paged pool (e.g. a gang scatter larger
+    than the remaining block budget).  Callers (EngineBackend's slot-chunked
+    decode, the decode-queue drain) catch it and wait for an eviction rather
+    than crashing the serving loop.
     """
 
 
@@ -52,10 +62,12 @@ class PrefillState:
 
 
 class ReplicaEngine:
-    """One model replica: preemptible prefill + slot-batched decode."""
+    """One model replica: preemptible prefill + slot-batched decode over a
+    paged KV pool."""
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
-                 max_len: int = 512, layers_per_quantum: int = 2):
+                 max_len: int = 512, layers_per_quantum: int = 2,
+                 block_size: int = 16, n_blocks: Optional[int] = None):
         assert cfg.family in ("dense",), "engine demo targets dense family"
         self.cfg = cfg
         self.params = params
@@ -65,11 +77,23 @@ class ReplicaEngine:
         d = cfg.d_model
         KV, hd, nl = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
         dt = jnp.dtype(cfg.dtype)
-        # slot-batched decode cache
-        self.cache_k = jnp.zeros((nl, max_slots, KV, max_len, hd), dt)
-        self.cache_v = jnp.zeros((nl, max_slots, KV, max_len, hd), dt)
-        self.slot_len = jnp.zeros((max_slots,), jnp.int32)
-        self.slot_rid = [-1] * max_slots
+        self.block_size = block_size
+        self.blocks_per_seq = -(-max_len // block_size)
+        # Pool invariant: a BOUND slot reserves its full max_len block
+        # budget at admission (kvpool.reserve), so decode-time appends can
+        # never run out of blocks mid-iteration — admission, where callers
+        # know how to wait for evictions, is the only failure point and it
+        # reports SlotsFull for slot and block exhaustion alike.  Default
+        # sizing = every slot's full budget + one spare sequence of
+        # headroom for a slotless gang-scattered resident awaiting its
+        # decode slot; a smaller explicit n_blocks makes the block budget
+        # the binding constraint.
+        self.kvpool = PagedKVCache.create(
+            nl, n_blocks if n_blocks is not None
+            else (max_slots + 1) * self.blocks_per_seq, KV, block_size,
+            hd, dt)
+        self.slot_rid: List[Optional[int]] = [None] * max_slots
+        self._view = None                      # cached dense decode view
         self._embed = jax.jit(self._embed_fn)
         self._layer_slice = jax.jit(self._layer_slice_fn,
                                     static_argnames=("lo", "hi"))
@@ -130,37 +154,126 @@ class ReplicaEngine:
         assert st.layer == self.cfg.num_layers
         return self._finalize(st.x)
 
+    # ---- resident KV (paged pool) ------------------------------------------
+    def resident(self, rid: int) -> bool:
+        return rid in self.kvpool.tables
+
+    def scatter_kv(self, rid: int, k: jnp.ndarray, v: jnp.ndarray) -> None:
+        """Install a request's KV block-granularly without binding a decode
+        slot — the gang-SP scatter path (§5.3: the SP group's sharded KV
+        lands on the long's home replica).  k/v: (L, KV, S, hd)."""
+        S = k.shape[2]
+        if S > self.max_len:
+            raise ValueError("sequence longer than engine max_len")
+        if not self.kvpool.can_admit(S):
+            raise SlotsFull(
+                f"KV pool of replica cannot hold {S} tokens for request "
+                f"{rid}: {len(self.kvpool.free)} of {self.kvpool.n_blocks} "
+                f"blocks free")
+        self.kvpool.admit(rid, k, v)
+
+    def release_kv(self, rid: int) -> None:
+        """Drop a resident request's blocks (preemption eviction / cleanup)."""
+        if rid in self.kvpool.tables:
+            self.kvpool.release(rid)
+
+    def clear(self) -> None:
+        """Evict every slot and release every resident request."""
+        self.slot_rid = [None] * self.max_slots
+        self._invalidate_view()
+        for rid in list(self.kvpool.tables):
+            self.kvpool.release(rid)
+
     # ---- decode slots -------------------------------------------------------
     def free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_rid) if r < 0]
+        return [i for i, r in enumerate(self.slot_rid) if r is None]
 
-    def admit(self, rid: int, st: PrefillState) -> int:
-        """Install a finished prefill's KV into a decode slot (the §5.2 KV
-        migration — here an in-memory copy).  Raises `SlotsFull` when every
-        slot is occupied — the request must wait for an eviction."""
+    def bind_slot(self, rid: int) -> int:
+        """Bind an already-resident request (scatter_kv) into a decode slot,
+        reserving its full decode block budget (see pool invariant)."""
+        if not self.resident(rid):
+            raise KeyError(f"request {rid} has no KV in the pool")
         free = self.free_slots()
         if not free:
             raise SlotsFull(
                 f"engine has no free decode slot for request {rid} "
                 f"({self.max_slots} occupied)")
+        try:
+            self.kvpool.reserve(rid, self.max_len)
+        except MemoryError as e:
+            raise SlotsFull(str(e)) from e
         slot = free[0]
+        self.slot_rid[slot] = rid
+        self._invalidate_view()
+        return slot
+
+    def admit(self, rid: int, st: PrefillState) -> int:
+        """Install a finished prefill's KV into the pool and bind a decode
+        slot (the §5.2 KV migration — here an in-memory copy).  Raises
+        `SlotsFull` when every slot is occupied OR the pool lacks the block
+        budget — both mean "wait for an eviction"."""
+        free = self.free_slots()
+        if not free:
+            raise SlotsFull(
+                f"engine has no free decode slot for request {rid} "
+                f"({self.max_slots} occupied)")
         S = st.tokens.shape[1]
+        if S > self.max_len:
+            raise ValueError("sequence longer than engine max_len")
+        if len(self.kvpool.free) < self.blocks_per_seq:   # full decode budget
+            raise SlotsFull(
+                f"KV pool cannot reserve a decode lane for request {rid}: "
+                f"{len(self.kvpool.free)} of {self.kvpool.n_blocks} "
+                f"blocks free, {self.blocks_per_seq} needed")
         k = jnp.stack(st.kv_k, 0)[:, 0]      # (L, KV, S, hd)
         v = jnp.stack(st.kv_v, 0)[:, 0]
-        pad = self.max_len - S
-        if pad < 0:
-            raise ValueError("sequence longer than engine max_len")
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        self.cache_k = self.cache_k.at[:, slot].set(k)
-        self.cache_v = self.cache_v.at[:, slot].set(v)
-        self.slot_len = self.slot_len.at[slot].set(S)
+        self.kvpool.admit(rid, k, v)
+        self.kvpool.reserve(rid, self.max_len)
+        slot = free[0]
         self.slot_rid[slot] = rid
+        self._invalidate_view()
         return slot
 
     def evict(self, slot: int) -> None:
-        self.slot_rid[slot] = -1
-        self.slot_len = self.slot_len.at[slot].set(0)
+        rid = self.slot_rid[slot]
+        self.slot_rid[slot] = None
+        if rid is not None:
+            self.release_kv(rid)
+            self._invalidate_view()
+
+    def slot_lengths(self) -> List[int]:
+        return [self.kvpool.lengths.get(rid, 0) if rid is not None else 0
+                for rid in self.slot_rid]
+
+    # ---- decode -------------------------------------------------------------
+    def _invalidate_view(self) -> None:
+        self._view = None
+
+    def _dense_view(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """The slot-batched dense cache the jitted decode step consumes,
+        gathered from the pool.  Cached between iterations: decode itself
+        is the only writer while slot bindings are stable (the returned
+        updated cache from `_decode` already carries the appended tokens),
+        so a full rebuild happens only after admit/bind/evict/clear —
+        per-token cost stays proportional to the step, not the pool."""
+        if self._view is not None:
+            return self._view
+        cfg = self.cfg
+        nl, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+        dt = jnp.dtype(cfg.dtype)
+        ck = jnp.zeros((nl, self.max_slots, KV, self.max_len, hd), dt)
+        cv = jnp.zeros((nl, self.max_slots, KV, self.max_len, hd), dt)
+        for s, rid in enumerate(self.slot_rid):
+            if rid is None or not self.resident(rid):
+                continue
+            k, v = self.kvpool.gather(rid)
+            pad = self.max_len - k.shape[2]
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            ck = ck.at[:, s].set(k)
+            cv = cv.at[:, s].set(v)
+        self._view = (ck, cv)
+        return self._view
 
     def decode_iteration(self, tokens: Dict[int, int]) -> Dict[int, int]:
         """One continuous-batching iteration over the active slots.
@@ -168,13 +281,24 @@ class ReplicaEngine:
         tok = jnp.zeros((self.max_slots,), jnp.int32)
         for s, t in tokens.items():
             tok = tok.at[s].set(t)
-        logits, self.cache_k, self.cache_v, new_len = self._decode(
-            self.cache_k, self.cache_v, self.slot_len, tok)
-        # only advance active slots
-        active = jnp.zeros((self.max_slots,), bool)
+        cache_k, cache_v = self._dense_view()
+        lens = self.slot_lengths()
+        slot_len = jnp.asarray(lens, jnp.int32)
+        logits, new_k, new_v, _ = self._decode(cache_k, cache_v, slot_len, tok)
+        # the updated dense cache carries the appended tokens (inactive
+        # slots' writes land at masked positions, same as the pre-paged
+        # engine) — keep it as the live view
+        self._view = (new_k, new_v)
+        # append the new token's KV back to the pool — active slots only.
+        # Slots reserved their full budget at admission, so this never
+        # allocates and cannot fail mid-iteration.
         for s in tokens:
-            active = active.at[s].set(True)
-        self.slot_len = jnp.where(active, new_len, self.slot_len)
+            rid = self.slot_rid[s]
+            pos = lens[s]
+            if pos >= self.max_len:
+                raise ValueError("decode past engine max_len")
+            self.kvpool.append_token(rid, new_k[:, s, :, pos],
+                                     new_v[:, s, :, pos])
         out = {}
         nxt = jnp.argmax(logits, -1)
         for s in tokens:

@@ -93,6 +93,24 @@ class PagedKVCache:
         v = v.transpose(0, 2, 1, 3, 4).reshape(L, KV, n * bs, hd)[:, :, :S]
         return k, v
 
+    def reserve(self, rid: int, capacity_tokens: int) -> None:
+        """Grow a resident request's block table to hold `capacity_tokens`
+        WITHOUT writing data — allocated-but-unused growth room.  Decode
+        slots reserve their sequence's full budget up front so
+        `append_token` never has to allocate (and so admission, where
+        callers know how to wait, is the only place that can run out of
+        blocks)."""
+        blocks = self.tables[rid]
+        need = self.blocks_needed(capacity_tokens) - len(blocks)
+        if need <= 0:
+            return
+        if len(self.free) < need:
+            raise MemoryError(f"need {need} blocks to reserve "
+                              f"{capacity_tokens} tokens for rid {rid}, "
+                              f"{len(self.free)} free")
+        for _ in range(need):
+            blocks.append(self.free.pop())
+
     def release(self, rid: int) -> None:
         self.free.extend(self.tables.pop(rid))
         self.lengths.pop(rid)

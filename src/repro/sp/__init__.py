@@ -1,5 +1,7 @@
 from repro.sp.common import finalize, merge_partials
 from repro.sp.decode import distributed_decode_attention
+from repro.sp.gang import (GangPrefillState, GangSPRunner, gang_degree,
+                           make_gang_mesh, plan_for_gang)
 from repro.sp.hybrid import fast_sp_attention, fast_sp_attention_local
 from repro.sp.inner import a2a_attention, allgather_attention
 from repro.sp.planner import (A100_40G, TPU_V5E, HardwareSpec, SPPlan,

@@ -1,0 +1,208 @@
+"""Gang-scheduled sequence-parallel prefill: the mesh plumbing and the
+shard_map layer quanta the EngineBackend runs when a scheduling policy
+requests fast SP for a long input (paper §5.3, live on real engines).
+
+A *gang* is N replicas atomically claimed by the policy for one long
+prefill.  On the execution side the gang maps onto a (ring, sp) device
+mesh: the sequence is sharded outer-major across both axes, the outer
+axis runs ring attention (neighbour ppermute), and the inner axis runs
+the planner-chosen strategy — `SPPlan.inner_impl`: "a2a" (Ulysses) or
+"allgather" (Megatron-SP) — exactly the hybrid in `sp/hybrid.py`, here
+driven quantum-by-quantum so the scheduler can preempt between quanta.
+
+Quantum semantics: `layers_per_quantum` is calibrated for single-replica
+execution; a gang of degree N advances `layers_per_quantum * N` layers per
+quantum at equal per-device compute, so SP prefill completes in ~N x fewer
+engine quanta while preemption latency (one quantum) stays bounded — the
+discrete version of the paper's "fast SP shrinks the preemption window".
+
+Tests/CI force host devices via XLA_FLAGS=--xla_force_host_platform_device_count=8
+(tests/multidevice/); on a single-device host `gang_degree` returns 1 and
+the backend falls back to the single-replica path.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sp.common import shard_map
+from repro.sp.hybrid import fast_sp_attention_local
+from repro.sp.planner import SPPlan, TPU_V5E, HardwareSpec, plan_fast_sp
+
+OUTER_AXIS = "ring"          # cross-"node" ring attention
+INNER_AXIS = "sp"            # high-bandwidth inner domain (a2a / allgather)
+
+SEQ_AXES = (OUTER_AXIS, INNER_AXIS)
+
+
+def gang_degree(requested: int, *, n_devices: Optional[int] = None,
+                cap: int = 0) -> int:
+    """Realizable gang size: the replicas the policy claimed, clipped to the
+    host's device count (and an optional cap).  Degrees whose inner axis
+    would not divide the head count fall back to a pure-ring mesh, so any
+    degree >= 2 is realizable; < 2 means "no gang, single-replica path"."""
+    n = min(requested, n_devices if n_devices is not None
+            else jax.device_count())
+    if cap:
+        n = min(n, cap)
+    return n if n >= 2 else 1
+
+
+def _mesh_shape(degree: int, num_heads: int) -> Tuple[int, int]:
+    """(outer, inner): inner 2 when it divides both the degree and the head
+    count (exercising the a2a/allgather strategies), else pure ring."""
+    if degree % 2 == 0 and num_heads % 2 == 0:
+        return degree // 2, 2
+    return degree, 1
+
+
+def make_gang_mesh(degree: int, num_heads: int) -> Mesh:
+    outer, inner = _mesh_shape(degree, num_heads)
+    devs = np.asarray(jax.devices()[:degree]).reshape(outer, inner)
+    return Mesh(devs, SEQ_AXES)
+
+
+def plan_for_gang(cfg: ModelConfig, input_len: int, mesh: Mesh,
+                  hw: HardwareSpec = TPU_V5E) -> SPPlan:
+    """The paper's four-combination search, shaped to this gang's mesh:
+    outer axis ~ nodes, inner axis ~ GPUs per node.  `input_len` is the
+    request's CLUSTER-scale length — strategy choice must reflect the real
+    request even when the engine executes a scale-model prompt."""
+    outer, inner = mesh.shape[OUTER_AXIS], mesh.shape[INNER_AXIS]
+    return plan_fast_sp(cfg, input_len, n_nodes=outer,
+                        gpus_per_node=max(inner, 1), tp=max(inner, 1), hw=hw)
+
+
+# ---------------------------------------------------------------------------
+# the shard_map layer quantum
+# ---------------------------------------------------------------------------
+def _sp_layer_slice_local(x, sub, *, cfg: ModelConfig, strategy: str):
+    """Runs INSIDE shard_map.  x (1, s_loc, d) = this rank's sequence
+    shard; sub = the layer-slice params, replicated.  The layer body IS
+    `model._dense_layer` — projections, RoPE, residuals, MLP all shared
+    with the single-replica engine path — with the core attention swapped
+    for the hybrid SP kernel (outer ring + inner a2a/allgather) via the
+    `attn_fn` hook, and RoPE fed GLOBAL positions so shards agree with
+    the single-replica computation."""
+    from repro.models import model as mdl
+    pi = jax.lax.psum(1, INNER_AXIS)
+    oidx = jax.lax.axis_index(OUTER_AXIS)
+    iidx = jax.lax.axis_index(INNER_AXIS)
+    B, s_loc, d = x.shape
+    rank = oidx * pi + iidx                      # outer-major linear rank
+    positions = rank * s_loc + jnp.broadcast_to(
+        jnp.arange(s_loc)[None], (B, s_loc))
+    attn_fn = functools.partial(fast_sp_attention_local,
+                                outer_axes=OUTER_AXIS, inner_axis=INNER_AXIS,
+                                strategy=strategy)
+
+    def body(x, pl):
+        x, kv = mdl._dense_layer(cfg, pl, x, positions,
+                                 sliding_window=cfg.sliding_window,
+                                 impl="xla", write_cache=True,
+                                 attn_fn=attn_fn)
+        return x, (kv.k, kv.v)
+
+    return jax.lax.scan(body, x, sub)
+
+
+@dataclass
+class GangPrefillState:
+    """Suspension state of a gang-SP prefill (§5.1 x §5.3): the sharded
+    intermediate + per-layer sequence-sharded KV, resumable between quanta
+    with bit-identical results."""
+    rid: int
+    tokens: jnp.ndarray                  # (1, S_pad) int32, padded
+    s_real: int                          # unpadded prompt length
+    x: jax.Array                         # (1, S_pad, d), mesh-sharded
+    layer: int                           # next layer to execute
+    degree: int
+    plan: SPPlan
+    kv_k: List[jax.Array] = field(default_factory=list)  # per-quantum stacks
+    kv_v: List[jax.Array] = field(default_factory=list)  # (n, 1, KV, S_pad, hd)
+
+
+class GangSPRunner:
+    """Compiled gang-SP prefill pipeline for one (model, mesh, strategy).
+
+    The EngineBackend keeps one runner per (degree, strategy); its jitted
+    pieces are shared by every long request the gang shape serves, so a
+    policy sweep pays the shard_map compilation once per prompt bucket."""
+
+    def __init__(self, cfg: ModelConfig, params, mesh: Mesh, strategy: str):
+        assert strategy in ("a2a", "allgather"), strategy
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh
+        self.strategy = strategy
+        self.degree = int(np.prod([mesh.shape[a] for a in SEQ_AXES]))
+        self._embed = jax.jit(
+            lambda toks: params["embed"][toks].astype(jnp.dtype(cfg.dtype)))
+        self._slice = jax.jit(self._slice_fn, static_argnames=("lo", "hi"))
+        self._logits = jax.jit(self._logits_fn, static_argnames=("s_real",))
+
+    # ------------------------------------------------------------------
+    def _slice_fn(self, x, *, lo: int, hi: int):
+        sub = jax.tree.map(lambda a: a[lo:hi], self.params["layers"])
+        seq = P(None, SEQ_AXES, None)
+        kv_seq = P(None, None, None, SEQ_AXES, None)
+        fn = functools.partial(_sp_layer_slice_local, cfg=self.cfg,
+                               strategy=self.strategy)
+        return shard_map(fn, mesh=self.mesh,
+                         in_specs=(seq, P()),
+                         out_specs=(seq, (kv_seq, kv_seq)),
+                         check_vma=False)(x, sub)
+
+    def _logits_fn(self, x, *, s_real: int):
+        cfg = self.cfg
+        last = jax.lax.dynamic_slice_in_dim(x, s_real - 1, 1, axis=1)
+        last = L.rms_norm(last, self.params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", last,
+                            self.params["lm_head"].astype(last.dtype))
+        return logits[:, -1]
+
+    # ------------------------------------------------------------------
+    def start(self, rid: int, tokens: np.ndarray,
+              plan: SPPlan) -> GangPrefillState:
+        """Embed + pad the prompt to a multiple of the gang degree (pad
+        tokens sit AFTER the real ones; causality keeps them out of every
+        real row's attention, and their KV is sliced away at scatter)."""
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        s_real = int(toks.shape[0])
+        pad = (-s_real) % self.degree
+        toks = np.pad(toks, (0, pad))[None]
+        x = self._embed(jnp.asarray(toks))
+        return GangPrefillState(rid=rid, tokens=jnp.asarray(toks),
+                                s_real=s_real, x=x, layer=0,
+                                degree=self.degree, plan=plan)
+
+    def quantum(self, st: GangPrefillState,
+                layers: int) -> Tuple[GangPrefillState, bool]:
+        """Advance up to `layers` layers (the gang-scaled quantum)."""
+        lo = st.layer
+        hi = min(lo + layers, self.cfg.num_layers)
+        x, (kh, vh) = self._slice(st.x, lo=lo, hi=hi)
+        st.x = x
+        st.kv_k.append(kh)
+        st.kv_v.append(vh)
+        st.layer = hi
+        return st, hi == self.cfg.num_layers
+
+    def logits(self, st: GangPrefillState) -> jnp.ndarray:
+        assert st.layer == self.cfg.num_layers
+        return self._logits(st.x, s_real=st.s_real)
+
+    def gather_kv(self, st: GangPrefillState) -> Tuple[np.ndarray, np.ndarray]:
+        """Pull the sequence-sharded per-layer KV to the host as contiguous
+        (L, KV, S, hd) arrays — the §5.3 scatter back to the home replica."""
+        k = jnp.concatenate(st.kv_k, axis=0)[:, 0, :, :st.s_real]
+        v = jnp.concatenate(st.kv_v, axis=0)[:, 0, :, :st.s_real]
+        return jax.device_get(k), jax.device_get(v)

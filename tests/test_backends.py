@@ -21,7 +21,7 @@ import pytest
 
 from repro.configs import get_config, reduced_config
 from repro.core import (POLICY_NAMES, ClusterConfig, ExecutionModel, Phase,
-                        Simulator, make_policy)
+                        SimBackend, Simulator, make_policy)
 from repro.core.request import Request
 from repro.models import init_params
 from repro.serving.backend import EngineBackend
@@ -41,10 +41,14 @@ def small_model():
 
 @pytest.fixture(scope="module")
 def cluster(small_model):
+    """The canonical engine test topology (mirrored by
+    repro.experiments.runner.engine_cluster): 2 general + 1 dedicated-decode
+    replica, with the prefill target tight enough that a 300K long needs an
+    SP group — the gang-scheduling regime."""
     cfg, _ = small_model
     cc = ClusterConfig(n_nodes=1, gpus_per_node=3, tp=1,
                        n_short_decode_replicas=1, max_decode_concurrency=8)
-    return cc, ExecutionModel(cfg, cc.replica_spec())
+    return cc, ExecutionModel(cfg, cc.replica_spec(), target_prefill_s=0.5)
 
 
 @pytest.fixture(scope="module")
@@ -176,6 +180,72 @@ def test_dis_coloc_inline_decode_completes(small_model, cluster,
         assert len(be.generated[r.rid]) == be._target_new(r)
 
 
+# ---------------- gang SP plumbing (single-device side) -----------------------
+def test_policies_stamp_sp_mode_on_long_work(cluster):
+    """The Work protocol carries the policy's SP choice: pecsched stamps
+    fastsp, the /FSP ablation and the baselines stamp ring — that is what
+    the engine backend keys gang scheduling on."""
+    cc, em = cluster
+    seen = {}
+
+    class Recorder(SimBackend):
+        def submit(self, work):
+            seen.setdefault(work.kind, set()).add(work.sp_mode)
+            super().submit(work)
+
+    for pol_name, kind, want in (("pecsched", "long_prefill", "fastsp"),
+                                 ("pecsched/fsp", "long_prefill", "ring"),
+                                 ("fifo", "long_full", "ring")):
+        seen.clear()
+        p = make_policy(pol_name, cc, em)
+        Simulator(p, backend=Recorder()).run(copy.deepcopy(mini_trace()))
+        assert seen[kind] == {want}, (pol_name, seen)
+        for k, modes in seen.items():
+            if k.startswith("short"):
+                assert modes == {"local"}, (pol_name, seen)
+
+
+def test_gang_collapses_to_single_replica_on_one_device(cluster, small_model):
+    """Tier-1 hosts see ONE device: pecsched still requests fastsp gangs,
+    `gang_degree` collapses them to 1, and the run completes on the
+    single-replica path with zero gang executions."""
+    import jax as _jax
+    if _jax.device_count() != 1:      # pragma: no cover - tier-1 contract
+        pytest.skip("this regression is specifically about 1-device hosts")
+    cfg, params = small_model
+    cc, em = cluster
+    be = EngineBackend(cfg, params, max_len=128, layers_per_quantum=1,
+                       clock="measured")
+    p = make_policy("pecsched", cc, em)
+    s = Simulator(p, backend=be).run(copy.deepcopy(mini_trace()))
+    assert s["long_completed"] == 2
+    assert be.stats["gang_prefills"] == 0
+    assert be.stats["prefill_quanta"] > 0
+
+
+def test_calibrate_sp_scales_fastsp_prefill(cluster):
+    """Measured per-degree timings reshape the analytic fast-SP curve: the
+    calibrated estimate is the single-replica roofline over the measured
+    speedup, interpolated to unmeasured degrees, and ring/local stay put."""
+    _, em = cluster
+    t_ring = em.prefill_time(300_000, 4, sp_mode="ring")
+    t_local = em.prefill_time(300_000, 1, sp_mode="local")
+    em.calibrate_sp({1: 1.0e-3, 2: 0.6e-3, 4: 0.35e-3})
+    try:
+        assert em.prefill_time(300_000, 4, sp_mode="fastsp") == \
+            pytest.approx(t_local / (1.0 / 0.35))
+        assert em.prefill_time(300_000, 2, sp_mode="fastsp") == \
+            pytest.approx(t_local / (1.0 / 0.6))
+        # unmeasured degree: nearest measured per-device efficiency scales
+        assert em.prefill_time(300_000, 8, sp_mode="fastsp") == \
+            pytest.approx(t_local / ((1.0 / 0.35) * 8 / 4))
+        # other modes never consult the calibration
+        assert em.prefill_time(300_000, 4, sp_mode="ring") == t_ring
+        assert em.prefill_time(300_000, 1, sp_mode="local") == t_local
+    finally:
+        em._sp_speedup = {}
+
+
 # ---------------- slot exhaustion --------------------------------------------
 def test_admit_raises_slots_full(small_model):
     cfg, params = small_model
@@ -197,6 +267,44 @@ def test_admit_raises_slots_full(small_model):
         eng.admit(2, st)
     eng.evict(0)                     # an eviction unblocks admission
     assert eng.admit(2, st) == 0
+
+
+def test_admit_raises_slots_full_on_block_budget(small_model):
+    """SlotsFull is the ONE admission-failure signal: a pool without the
+    block budget refuses `admit` (even with free slots) and `scatter_kv`
+    (the gang path) with SlotsFull, and an eviction unblocks both.  A bound
+    slot reserves its FULL max_len budget up front (4 blocks here), so
+    decode-time appends can never exhaust the pool mid-iteration."""
+    cfg, params = small_model
+    # 5 blocks of 16 tokens but 4 slots: blocks, not slots, bind first
+    eng = ReplicaEngine(cfg, params, max_slots=4, max_len=64,
+                        block_size=16, n_blocks=5)
+    toks = jnp.zeros((1, 20), jnp.int32)        # 2 data blocks per request
+    st = eng.start_prefill(0, toks)
+    done = False
+    while not done:
+        st, done = eng.prefill_quantum(st)
+    slot = eng.admit(0, st)
+    # full decode budget reserved: 4 of 5 blocks gone for 20 tokens
+    assert len(eng.kvpool.free) == 1
+    assert len(eng.free_slots()) == 3           # slots left, blocks not
+    st2 = eng.start_prefill(1, toks)
+    done = False
+    while not done:
+        st2, done = eng.prefill_quantum(st2)
+    with pytest.raises(SlotsFull):
+        eng.admit(1, st2)
+    k = jnp.stack(st2.kv_k, 0)[:, 0]
+    v = jnp.stack(st2.kv_v, 0)[:, 0]
+    with pytest.raises(SlotsFull):              # gang scatter: same contract
+        eng.scatter_kv(1, k, v)
+    eng.evict(slot)                             # frees slot AND blocks
+    eng.scatter_kv(1, k, v)                     # slotless: data blocks only
+    assert len(eng.kvpool.free) == 3
+    assert eng.bind_slot(1) == 0                # binding reserves the rest
+    assert len(eng.kvpool.free) == 1
+    out = eng.decode_iteration({0: 3})          # resident KV decodes
+    assert isinstance(out[0], int)
 
 
 def test_decode_waits_for_slots(small_model, cluster):
