@@ -1,0 +1,168 @@
+"""CI bench smoke: the repo's per-PR performance trajectory, as one JSON.
+
+Runs a reduced configuration of the two standing benchmarks —
+
+  * `simulator_scale`-style trace replays (events/sec of the slotted-heap
+    event loop under fifo and pecsched), and
+  * `engine_overhead` (real-JAX context-switch / suspension-state /
+    KV-migration costs, §5.1/§5.2)
+
+— writes every number to ``BENCH_pr.json`` (uploaded as a CI artifact, so
+the trajectory is diffable across PRs), and GATES on simulator replay
+throughput: if events/sec drops more than ``MAX_REGRESSION`` below the
+checked-in ``bench_baseline.json``, the job fails.
+
+Engine timings are recorded but not gated — wall-clock JAX compute on
+shared CI runners is too noisy for a hard bound; the simulator event loop
+is pure Python and stable enough to gate.
+
+The baseline values are deliberately conservative (local measurement with
+a haircut, see `--update-baseline`) so that runner-speed variance does not
+trip the gate while an algorithmic regression (the event loop going
+quadratic, say) still does.
+
+    PYTHONPATH=src python benchmarks/ci_bench.py
+    PYTHONPATH=src python benchmarks/ci_bench.py --update-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+BASELINE_PATH = Path(__file__).parent / "bench_baseline.json"
+#: fail if simulator replay throughput drops >30% below the baseline
+MAX_REGRESSION = 0.30
+#: haircut applied when recording a new baseline, absorbing machine-speed
+#: variance between the recording host and CI runners
+BASELINE_HAIRCUT = 0.7
+
+SIM_CASES = (
+    # (name, policy, scenario, n_requests)
+    ("fifo_azure_20k", "fifo", "azure_default", 20_000),
+    ("pecsched_azure_20k", "pecsched", "azure_default", 20_000),
+    ("pecsched_coord_bursty_10k", "pecsched/coord", "bursty", 10_000),
+)
+
+
+def run_sim_cases() -> dict:
+    from repro.core import Simulator, get_scenario, make_policy, paper_cluster
+    from repro.core.workload import calibrate_short_capacity
+
+    cc, em = paper_cluster("mistral_7b")
+    rps = calibrate_short_capacity(cc, em) * 0.65
+    out = {}
+    for name, pol, scenario, n in SIM_CASES:
+        reqs = get_scenario(scenario, n_requests=n, seed=0, arrival_rps=rps)
+        p = make_policy(pol, cc, em)
+        sim = Simulator(p)
+        t0 = time.perf_counter()
+        s = sim.run(copy.deepcopy(reqs))
+        wall = time.perf_counter() - t0
+        prof = sim.profile()
+        out[name] = {
+            "events_per_sec": round(prof["events_per_sec"], 1),
+            "events": prof["events"],
+            "wall_s": round(wall, 3),
+            "completed": s["short_completed"] + s["long_completed"],
+        }
+        print(f"[sim]    {name:28s} {prof['events_per_sec']:>12,.0f} ev/s "
+              f"({prof['events']} events, {wall:.2f}s)")
+    return out
+
+
+def run_engine_case() -> dict:
+    sys.path.insert(0, str(Path(__file__).parent))
+    from engine_overhead import run as engine_run
+    t0 = time.perf_counter()
+    res = engine_run(seq_long=64, layers=4)
+    res = {k: round(float(v), 6) for k, v in res.items()}
+    res["wall_s"] = round(time.perf_counter() - t0, 3)
+    print(f"[engine] context_switch={res['context_switch_ms']:.2f}ms "
+          f"suspend_state={res['suspend_state_vs_kv']*100:.1f}%ofKV "
+          f"kv_migration={res['kv_migration_ms']:.2f}ms")
+    return res
+
+
+def gate(sim_results: dict, baseline: dict) -> list:
+    failures = []
+    ungated = set(sim_results) - set(baseline.get("simulator", {}))
+    for name in sorted(ungated):
+        failures.append(f"{name}: measured but has no baseline floor — "
+                        f"run ci_bench.py --update-baseline and commit "
+                        f"{BASELINE_PATH.name}")
+    for name, base in baseline.get("simulator", {}).items():
+        cur = sim_results.get(name)
+        if cur is None:
+            failures.append(f"{name}: in baseline but not measured")
+            continue
+        floor = base["events_per_sec"] * (1.0 - MAX_REGRESSION)
+        status = "OK" if cur["events_per_sec"] >= floor else "REGRESSED"
+        print(f"[gate]   {name:28s} {cur['events_per_sec']:>12,.0f} ev/s "
+              f"vs floor {floor:,.0f} ({status})")
+        if cur["events_per_sec"] < floor:
+            failures.append(
+                f"{name}: {cur['events_per_sec']:,.0f} ev/s is "
+                f">{MAX_REGRESSION:.0%} below baseline "
+                f"{base['events_per_sec']:,.0f}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(Path(__file__).parent / "artifacts"
+                                         / "BENCH_pr.json"))
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="record current throughput (with the haircut) as "
+                         "the new checked-in baseline instead of gating")
+    args = ap.parse_args()
+
+    sim_results = run_sim_cases()
+    engine_results = run_engine_case()
+
+    report = {
+        "schema": 1,
+        "simulator": sim_results,
+        "engine": engine_results,
+        "gate": {"max_regression": MAX_REGRESSION,
+                 "baseline": str(BASELINE_PATH.name)},
+    }
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=1))
+    print(f"wrote {out}")
+
+    if args.update_baseline:
+        baseline = {
+            "note": f"simulator events/sec floors = measured * "
+                    f"{BASELINE_HAIRCUT} (machine-variance haircut); the "
+                    f"bench-smoke gate fails below "
+                    f"(1 - {MAX_REGRESSION}) * these values",
+            "simulator": {
+                name: {"events_per_sec":
+                       round(r["events_per_sec"] * BASELINE_HAIRCUT, 1)}
+                for name, r in sim_results.items()},
+        }
+        BASELINE_PATH.write_text(json.dumps(baseline, indent=1))
+        print(f"updated {BASELINE_PATH}")
+        return
+
+    if not BASELINE_PATH.exists():
+        print(f"ERROR: no baseline at {BASELINE_PATH}; run with "
+              f"--update-baseline to record one", file=sys.stderr)
+        sys.exit(2)
+    failures = gate(sim_results, json.loads(BASELINE_PATH.read_text()))
+    if failures:
+        for f in failures:
+            print(f"BENCH REGRESSION: {f}", file=sys.stderr)
+        sys.exit(1)
+    print("BENCH OK")
+
+
+if __name__ == "__main__":
+    main()

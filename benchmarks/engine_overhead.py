@@ -55,7 +55,7 @@ def run(seq_long: int = 96, layers: int = 8) -> Dict:
     for _ in range(layers // 2):
         st2, _ = eng.prefill_quantum(st2)
     t_half = time.perf_counter()
-    sh = full_prefill(short)                  # the preempting short
+    full_prefill(short)                       # the preempting short
     t_short = time.perf_counter() - t_half
     while True:
         st2, done = eng.prefill_quantum(st2)
@@ -67,7 +67,7 @@ def run(seq_long: int = 96, layers: int = 8) -> Dict:
     state_frac = st.intermediate_bytes() / max(st.kv_bytes(), 1)
 
     t0 = time.perf_counter()
-    slot = dec.admit(0, st)
+    dec.admit(0, st)
     jax.block_until_ready(dec.kvpool.k)       # pool write = the migration
     t_migrate = time.perf_counter() - t0
 

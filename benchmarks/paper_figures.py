@@ -7,9 +7,7 @@ from __future__ import annotations
 
 from typing import Dict
 
-import numpy as np
-
-from benchmarks.common import MODELS, all_sweeps, run_model_sweep
+from benchmarks.common import MODELS
 from repro.core import TraceConfig, generate_trace, trace_stats
 
 
@@ -158,7 +156,6 @@ def table7_overhead(sweeps) -> Dict:
         per_req = r["sched_time_s"] / max(r["n_short"] + r["n_long"], 1)
         # per-request scheduling time over its own JCT, p99-style proxy:
         ratio_long = per_req / max(r["long_jct_mean"] or 1e9, 1e-9)
-        ratio_short = per_req / max(r["short_qd_mean"] or 1e-3, 1e-3)
         out[m] = {"sched_s_per_req": per_req, "ratio_long": ratio_long}
         print(f"[table7] {m:12s} sched {per_req*1e6:7.1f}us/req "
               f"ratio-to-longJCT={ratio_long*100:.4f}% (paper <=0.345%)")
@@ -168,7 +165,6 @@ def table7_overhead(sweeps) -> Dict:
 def fig15_scalability() -> Dict:
     """Fig. 15: scheduling overhead vs cluster size (simulation)."""
     import copy
-    import time as _t
     from repro.core import (ClusterConfig, ExecutionModel, Simulator,
                             experiment_trace, make_policy)
     from repro.sp.planner import A100_40G

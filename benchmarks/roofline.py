@@ -16,7 +16,7 @@ import json
 from pathlib import Path
 from typing import Dict, List, Optional
 
-from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.configs import INPUT_SHAPES, get_config
 
 ART = Path(__file__).parent / "artifacts" / "dryrun"
 

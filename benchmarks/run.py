@@ -17,8 +17,7 @@ sys.path.insert(0, str(Path(__file__).parent.parent))
 from benchmarks import paper_figures as pf
 from benchmarks import roofline as rl
 from benchmarks import sp_costmodel_validation as spv
-from benchmarks.common import (ART, MODELS, N_REQUESTS, all_sweeps,
-                               run_model_sweep)
+from benchmarks.common import ART, MODELS, N_REQUESTS, run_model_sweep
 
 
 def main() -> None:

@@ -7,7 +7,7 @@ from __future__ import annotations
 from typing import Dict
 
 from repro.configs import get_config
-from repro.sp.planner import TPU_V5E, plan_fast_sp, stage_costs
+from repro.sp.planner import plan_fast_sp, stage_costs
 
 
 def planner_selection_sweep() -> Dict:

@@ -64,7 +64,7 @@ def main() -> None:
     cres = ex.evaluate_claims(cells)
     print(ex.render_markdown(cres))
     summ = ex.summarize_results(cres)
-    report = ex.write_report(cres, args.out, meta={
+    ex.write_report(cres, args.out, meta={
         "source": "examples/paper_claims.py", "seed": args.seed,
         "n_specs": len(specs), "wall_s": round(time.time() - t0, 2)})
     print(f"\n{summ['n_passed']}/{summ['n_evaluated']} evaluated claims pass "

@@ -2,8 +2,9 @@
 on a real-execution mini cluster.
 
 The scheduling brain is the same `make_policy` stack the analytic simulator
-runs (all nine names: fifo, fifo_noshort, reservation, priority, pecsched
-and its /PE /Dis /CoL /FSP ablations); execution is real JAX compute on
+runs (all ten names: fifo, fifo_noshort, reservation, priority, pecsched,
+its /PE /Dis /CoL /FSP ablations and the adaptive-coordination
+pecsched/coord); execution is real JAX compute on
 `ReplicaEngine`s via the EngineBackend — layer-granular preemptible prefill,
 KV migration to the dedicated decode engine, slot-chunked decode.  Virtual
 time advances by measured compute (--clock measured, default) or by the
@@ -88,6 +89,12 @@ def main() -> None:
                     help="prefill latency target (s) driving how many "
                          "replicas a long claims — tight targets form SP "
                          "gangs, the paper's §5.3 regime")
+    ap.add_argument("--coordination", choices=("static", "adaptive"),
+                    default="static",
+                    help="adaptive swaps pecsched for pecsched/coord: the "
+                         "prefill/decode split is re-evaluated at dispatch "
+                         "time and replica roles flip at safe points "
+                         "(§5.2 coordination); prints the role timeline")
     ap.add_argument("--trace-csv", default=None,
                     help="path for --scenario csv")
     ap.add_argument("--compare-sim", action="store_true",
@@ -105,6 +112,11 @@ def main() -> None:
         args.n = min(args.n, 10)
     policies = POLICY_NAMES if args.policy == "all" \
         else tuple(args.policy.split(","))
+    if args.coordination == "adaptive":
+        # swap the static split for the coordinator; dedupe in case the
+        # list already named pecsched/coord (e.g. --policy all)
+        policies = tuple(dict.fromkeys(
+            "pecsched/coord" if p == "pecsched" else p for p in policies))
 
     cfg = dataclasses.replace(
         reduced_config(get_config("mistral_7b"), layers=args.layers),
@@ -165,6 +177,17 @@ def main() -> None:
               f"{ms(s['long_jct_mean']):8.1f}m "
               f"{s['preemptions']:7d} {s['long_starved_frac']:7.2f} "
               f"{backend.measured_s:7.2f}s {wall:5.1f}s{gang_note}")
+        if pol.role_log:
+            shown = ", ".join(f"t={t*1e3:.2f}ms r{rid} {old}->{new}"
+                              for t, rid, old, new in pol.role_log[:6])
+            more = f" (+{len(pol.role_log) - 6} more)" \
+                if len(pol.role_log) > 6 else ""
+            occ = ", ".join(f"{role}={frac:.1%}"
+                            for role, frac in s["role_occupancy"].items())
+            print(f"  role timeline: {shown}{more}")
+            print(f"  role occupancy: {occ}  "
+                  f"[{s['role_flips']} flips, engine-vetted: "
+                  f"{backend.stats['role_flips']}]")
         if args.compare_sim:
             ps = make_policy(pol_name, cc, em)
             ss = Simulator(ps).run(copy.deepcopy(reqs))

@@ -1,6 +1,7 @@
 from repro.core.arrivals import ARRIVAL_PROCESSES, make_arrivals
 from repro.core.backend import ExecutionBackend, SimBackend
 from repro.core.cluster import ClusterConfig, build_replicas
+from repro.core.coordinator import CoordinatorConfig, RoleCoordinator
 from repro.core.costmodel import ExecutionModel, ReplicaSpec
 from repro.core.metrics import summarize
 from repro.core.request import Phase, Request

@@ -67,6 +67,15 @@ class ExecutionBackend:
         Analytic backends need no action; real backends run the decode now
         so generations complete and parked KV is released."""
 
+    def role_change(self, t: float, rid: int, old_role: str,
+                    new_role: str) -> None:
+        """The coordinator flipped replica `rid`'s serving role (§5.2
+        load-adaptive coordination).  For analytic backends the flip is
+        pure scheduling state — nothing to do.  Real backends verify the
+        safe point actually held on the hardware: the engine must be
+        drained (no live decode slots, no resident gang KV) before its
+        replica may serve under a different role."""
+
     # -- driver hooks ---------------------------------------------------
     def on_event(self, t: float, kind: str, payload) -> None:
         """Handle a backend-internal event kind (e.g. an engine quantum)."""

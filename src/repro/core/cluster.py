@@ -1,12 +1,33 @@
-"""Cluster model: chips -> replicas -> nodes, plus replica runtime state."""
+"""Cluster model: chips -> replicas -> nodes, plus replica runtime state.
+
+Replica roles are DYNAMIC (§5.2 coordination): every replica carries a
+`role` that the scheduling policy may change at runtime through
+`ReplicaState.set_role`, which also keeps the per-role occupancy and busy
+clocks the role-utilization metrics read (core/metrics.py).
+
+    general       prefill + in-place decode + long SP groups + colocation
+                  (the paper's "colocated" serving role)
+    prefill       a decode-pool replica borrowed for short prefill during a
+                  prefill surge; serves short prefill ONLY, so it can be
+                  returned to the pool the moment it drains
+    short_decode  dedicated short-decode pool (§5.2 disaggregation)
+
+A static split (the pre-coordination behaviour) is simply a cluster whose
+roles never change after `build_replicas`.  Role transitions are the
+policy/coordinator's job (core/coordinator.py) and only happen at safe
+points — see RoleCoordinator.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
-from repro.configs.base import ModelConfig
-from repro.core.costmodel import ExecutionModel, ReplicaSpec
+from repro.core.costmodel import ReplicaSpec
 from repro.sp.planner import TPU_V5E, HardwareSpec
+
+#: every role a replica can hold; prefill-capable = can run short prefill
+ROLES = ("general", "prefill", "short_decode")
+PREFILL_CAPABLE = ("general", "prefill")
 
 
 @dataclass
@@ -39,7 +60,7 @@ class ClusterConfig:
 class ReplicaState:
     rid: int
     node: int
-    role: str = "general"               # general | short_decode
+    role: str = "general"               # general | prefill | short_decode
     work: Optional[object] = None       # current Work or None
     claimed_by: Optional[int] = None    # pending long request id
     # long-request occupancy (this replica is part of a long group)
@@ -49,10 +70,43 @@ class ReplicaState:
     decode_load: int = 0                # concurrent short decodes (decode role)
     busy_time: float = 0.0              # accumulated for idle-rate metric
     queue_tokens: int = 0               # local queue length in tokens (§6.2)
+    # --- dynamic-role bookkeeping (coordinator + metrics) ---
+    draining: bool = False              # decode replica: admits no NEW decode
+    #                                     batches; flips once decode_load == 0
+    role_since: float = 0.0             # when the current role began
+    role_time: Dict[str, float] = field(default_factory=dict)
+    busy_by_role: Dict[str, float] = field(default_factory=dict)
 
     @property
     def idle(self) -> bool:
         return self.work is None and self.long_rid is None
+
+    # ------------------------------------------------------------------
+    def set_role(self, t: float, new_role: str) -> str:
+        """Transition to `new_role` at time `t`, closing the occupancy
+        interval of the old role.  Returns the old role.  Callers (the
+        coordinator) are responsible for only flipping at safe points."""
+        assert new_role in ROLES, new_role
+        old = self.role
+        self.role_time[old] = self.role_time.get(old, 0.0) \
+            + max(t - self.role_since, 0.0)
+        self.role = new_role
+        self.role_since = t
+        self.draining = False
+        return old
+
+    def add_busy(self, dt: float) -> None:
+        """Accumulate busy time, bucketed by the role it was served under."""
+        self.busy_time += dt
+        self.busy_by_role[self.role] = self.busy_by_role.get(self.role, 0.0) + dt
+
+    def role_occupancy(self, t_end: float) -> Dict[str, float]:
+        """Seconds spent in each role up to `t_end` (closes the live
+        interval without mutating state)."""
+        out = dict(self.role_time)
+        out[self.role] = out.get(self.role, 0.0) \
+            + max(t_end - self.role_since, 0.0)
+        return out
 
 
 def build_replicas(cc: ClusterConfig, *, dedicated_decode: bool) -> List[ReplicaState]:

@@ -16,7 +16,7 @@ from dataclasses import dataclass
 from typing import Dict, Optional
 
 from repro.configs.base import ModelConfig
-from repro.sp.planner import (TPU_V5E, A100_40G, HardwareSpec, plan_fast_sp,
+from repro.sp.planner import (TPU_V5E, HardwareSpec, plan_fast_sp,
                               ring_hop_time)
 
 

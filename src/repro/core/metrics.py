@@ -82,10 +82,49 @@ def summarize(policy, t_end: float) -> Dict:
         "preemptions": int(getattr(policy, "preemption_events", 0)),
         # paper Table 1: GPU idle rate (Eq. 1)
         "gpu_idle_rate": _idle_rate(policy, t_end),
+        # §5.2 coordination: replica role flips performed by the coordinator
+        # (0 for every static policy)
+        "role_flips": len(getattr(policy, "role_log", ())),
     }
+    roles = _role_breakdown(policy, t_end)
+    if roles is not None:
+        out.update(roles)
     per_tenant = _per_tenant(shorts + longs)
     if per_tenant is not None:
         out["per_tenant"] = per_tenant
+    return out
+
+
+def _role_breakdown(policy, t_end: float) -> Optional[Dict]:
+    """Role-occupancy timeline + utilization-by-role (§5.2 coordination).
+
+    `role_occupancy` is the fraction of total replica-time spent in each
+    role; `role_utilization` is busy-time over occupancy per role —
+    together they show WHERE the coordinator moved capacity and whether
+    the moved capacity was actually used.  `role_timeline` (the flip log,
+    [t, rid, old, new] rows) appears only when flips occurred, keeping
+    static-policy summaries small."""
+    replicas = getattr(policy, "replicas", None)
+    if not replicas or t_end <= 0 or not hasattr(replicas[0], "role_occupancy"):
+        return None
+    occ: Dict[str, float] = {}
+    busy: Dict[str, float] = {}
+    for r in replicas:
+        for role, secs in r.role_occupancy(t_end).items():
+            occ[role] = occ.get(role, 0.0) + secs
+        for role, secs in r.busy_by_role.items():
+            busy[role] = busy.get(role, 0.0) + secs
+    total = t_end * len(replicas)
+    out: Dict = {
+        "role_occupancy": {role: secs / total
+                           for role, secs in sorted(occ.items())},
+        "role_utilization": {role: min(busy.get(role, 0.0) / secs, 1.0)
+                             for role, secs in sorted(occ.items()) if secs > 0},
+    }
+    role_log = getattr(policy, "role_log", ())
+    if role_log:
+        out["role_timeline"] = [[float(t), int(rid), old, new]
+                                for (t, rid, old, new) in role_log]
     return out
 
 

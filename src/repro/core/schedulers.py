@@ -17,6 +17,8 @@ PecSchedPolicy      §5 (full system)        Figs.9-11 (overall), Table 6/7
  pecsched/dis       §6.4 no disaggregation  Fig.13 ablation
  pecsched/col       §6.4 no colocation      Table 6 ablation
  pecsched/fsp       §6.4 ring-only SP       Fig.14 + Table 3/6 ablation
+ pecsched/coord     §5.2 load-adaptive      coordination-vs-static claim
+                    role coordination       cells (bursty / diurnal)
 ================== ======================= ===============================
 
 Dispatch contract with the driver: the Simulator applies every event at a
@@ -35,12 +37,13 @@ and the real-engine mini cluster, unmodified.
 from __future__ import annotations
 
 import itertools
-import math
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
-from repro.core.cluster import ClusterConfig, ReplicaState, build_replicas
+from repro.core.cluster import (PREFILL_CAPABLE, ClusterConfig, ReplicaState,
+                                build_replicas)
+from repro.core.coordinator import CoordinatorConfig, RoleCoordinator
 from repro.core.costmodel import ExecutionModel
 from repro.core.request import Phase, Request
 from repro.core.simulator import Work
@@ -61,11 +64,14 @@ class BasePolicy:
         self.all_requests: List[Request] = []
         self.preemption_events = 0          # total suspensions (paper Table 3/6)
         self.per_request_sched: Dict[int, float] = {}
-        # cross-backend parity harness: when enabled, every placement and
-        # preemption decision is appended as a tuple so two backends' runs
-        # can be compared event-for-event (tests/test_backends.py)
+        # cross-backend parity harness: when enabled, every placement,
+        # preemption and role-flip decision is appended as a tuple so two
+        # backends' runs can be compared event-for-event (tests/test_backends)
         self.record_decisions = False
         self.decision_log: List[tuple] = []
+        # role-transition log: (t, rid, old_role, new_role) per flip — the
+        # coordinator appends via _flip_role; metrics reads it
+        self.role_log: List[tuple] = []
 
     # ------------------------------------------------------------------
     def bind(self, backend) -> None:
@@ -115,12 +121,24 @@ class BasePolicy:
             else:
                 if rep.work is work:
                     rep.work = None
-                rep.busy_time += busy if busy is not None else work.duration
+                rep.add_busy(busy if busy is not None else work.duration)
 
     def _idle_general(self, *, unclaimed=True) -> List[ReplicaState]:
         return [r for r in self.replicas
                 if r.role == "general" and r.idle
                 and (not unclaimed or r.claimed_by is None)]
+
+    def _flip_role(self, t: float, rep: ReplicaState, new_role: str) -> str:
+        """Apply a coordinator role flip: transition the replica, record it
+        in the transition (and parity) logs, notify the backend so real
+        engines can verify the safe point actually held."""
+        old = rep.set_role(t, new_role)
+        self.role_log.append((t, rep.rid, old, new_role))
+        if self.record_decisions:
+            self.decision_log.append(("role", rep.rid, old, new_role))
+        if self.backend is not None:
+            self.backend.role_change(t, rep.rid, old, new_role)
+        return old
 
     def _batch_shorts(self, queue: deque, max_tokens: int) -> List[Request]:
         batch, tok = [], 0
@@ -324,34 +342,74 @@ class LongState:
 class PecSchedPolicy(BasePolicy):
     """Preemptive scheduling + prefill/decode disaggregation & colocation +
     fast SP. Ablations: preemption (/PE), disagg (/Dis), coloc (/CoL),
-    fastsp (/FSP) — each flag False reproduces the paper's variant."""
+    fastsp (/FSP) — each flag False reproduces the paper's variant.
+
+    ``coordination="adaptive"`` (the `pecsched/coord` policy name) replaces
+    the static construction-time prefill/decode split with a
+    `RoleCoordinator` that re-evaluates the split at dispatch time from
+    observable pressure and flips replica roles at safe points (§5.2
+    coordinated colocation/disaggregation).  Read in coordination terms,
+    the existing ablations are "coordination off" in one direction each:
+    /Dis pins every replica colocated (no decode pool, ever), /CoL pins the
+    split fully disaggregated (no colocation with long decode), and the
+    default static PecSched pins the pool size at construction."""
     name = "pecsched"
 
     def __init__(self, cc, em, *, preemption=True, disagg=True, coloc=True,
-                 fastsp=True):
+                 fastsp=True, coordination: str = "static",
+                 coordinator_config: Optional[CoordinatorConfig] = None):
+        if coordination not in ("static", "adaptive"):
+            raise ValueError(f"bad coordination mode {coordination!r}")
         self.preemption = preemption
         self.disagg = disagg
         self.coloc = coloc
         self.fastsp = fastsp
+        self.coordination = coordination
         super().__init__(cc, em, dedicated_decode=disagg)
         if not any(r.role == "short_decode" for r in self.replicas):
             self.disagg = False
+        self.coordinator: Optional[RoleCoordinator] = None
+        if coordination == "adaptive" and self.disagg:
+            self.coordinator = RoleCoordinator(cc, em, coordinator_config)
         self.short_queue: deque = deque()
+        self.short_queue_tokens = 0              # incremental backlog signal
         self.long_queue: deque = deque()
         self.longs: Dict[int, LongState] = {}    # rid -> state
         self.decode_queue: deque = deque()       # shorts waiting for decode pool
         suffix = []
-        if not preemption: suffix.append("PE")
-        if not disagg: suffix.append("Dis")
-        if not coloc: suffix.append("CoL")
-        if not fastsp: suffix.append("FSP")
-        if suffix:
-            self.name = "pecsched/" + "".join(suffix)
+        if not preemption:
+            suffix.append("PE")
+        if not disagg:
+            suffix.append("Dis")
+        if not coloc:
+            suffix.append("CoL")
+        if not fastsp:
+            suffix.append("FSP")
+        base = "pecsched/coord" if coordination == "adaptive" else "pecsched"
+        self.name = base + ("/" + "".join(suffix) if suffix else "")
 
     # ------------------------------------------------------------------
     def on_arrival(self, t, req):
         self.all_requests.append(req)
-        (self.long_queue if req.is_long else self.short_queue).append(req)
+        if req.is_long:
+            self.long_queue.append(req)
+        else:
+            self.short_queue.append(req)
+            self.short_queue_tokens += req.input_len
+
+    def _batch_shorts(self, queue, max_tokens):
+        batch = super()._batch_shorts(queue, max_tokens)
+        if queue is self.short_queue:
+            self.short_queue_tokens -= sum(r.input_len for r in batch)
+        return batch
+
+    def _decode_pool_active(self) -> bool:
+        """Is there a decode replica that accepts NEW migrations?  Draining
+        replicas finish their in-flight load but take nothing new; with the
+        pool empty (coordinator borrowed everything), completions decode in
+        place — the colocated path — so nothing waits on an empty pool."""
+        return any(r.role == "short_decode" and not r.draining
+                   for r in self.replicas)
 
     # ------------------------------------------------------------------
     def on_done(self, t, work):
@@ -359,7 +417,7 @@ class PecSchedPolicy(BasePolicy):
             self._release(work)
             for r in work.requests:
                 r.first_token = t
-            if self.disagg:
+            if self.disagg and self._decode_pool_active():
                 # KV streams to the decode replica DURING prefill (overlapped,
                 # §5.2) — only a negligible tail remains at completion.
                 for r in work.requests:
@@ -383,14 +441,14 @@ class PecSchedPolicy(BasePolicy):
         elif work.kind == "short_decode":
             for rid in work.replica_ids:
                 self.replicas[rid].decode_load -= len(work.requests)
-                self.replicas[rid].busy_time += work.duration
+                self.replicas[rid].add_busy(work.duration)
             self._finish_requests(t, work.requests)
             self._drain_decode_queue(t)
         elif work.kind == "short_prefill_coloc":
             self._release(work)
             for r in work.requests:
                 r.first_token = t
-            if self.disagg:
+            if self.disagg and self._decode_pool_active():
                 for r in work.requests:
                     r.phase = Phase.MIGRATING
                     self.decode_queue.append(r)
@@ -437,7 +495,8 @@ class PecSchedPolicy(BasePolicy):
 
     # ------------------------------------------------------------------
     def _drain_decode_queue(self, t):
-        pool = [r for r in self.replicas if r.role == "short_decode"]
+        pool = [r for r in self.replicas
+                if r.role == "short_decode" and not r.draining]
         if not pool:
             return
         while self.decode_queue:
@@ -505,6 +564,10 @@ class PecSchedPolicy(BasePolicy):
 
     # ------------------------------------------------------------------
     def dispatch(self, t):
+        if self.coordinator is not None:
+            # re-evaluate the prefill/decode split BEFORE placement, so a
+            # replica borrowed this pass serves this pass's backlog
+            self.coordinator.step(t, self)
         self._dispatch_longs(t)
         self._dispatch_shorts(t)
         self._resume_paused(t)
@@ -549,8 +612,11 @@ class PecSchedPolicy(BasePolicy):
     def _dispatch_shorts(self, t):
         while self.short_queue:
             placed = False
-            # 1) idle general replica (not claimed, not in a long group)
-            idle = [r for r in self._idle_general() if r.long_rid is None]
+            # 1) idle prefill-capable replica (general or borrowed from the
+            # decode pool; not claimed, not in a long group)
+            idle = [r for r in self.replicas
+                    if r.role in PREFILL_CAPABLE and r.idle
+                    and r.claimed_by is None and r.long_rid is None]
             if idle:
                 batch = self._batch_shorts(self.short_queue,
                                            self.cc.max_batch_tokens)
@@ -606,7 +672,8 @@ class PecSchedPolicy(BasePolicy):
 # every name make_policy accepts — the canonical policy matrix consumed by
 # examples, launchers and the cross-backend test sweeps
 POLICY_NAMES = ("fifo", "fifo_noshort", "reservation", "priority", "pecsched",
-                "pecsched/pe", "pecsched/dis", "pecsched/col", "pecsched/fsp")
+                "pecsched/pe", "pecsched/dis", "pecsched/col", "pecsched/fsp",
+                "pecsched/coord")
 
 
 def make_policy(name: str, cc: ClusterConfig, em: ExecutionModel) -> BasePolicy:
@@ -629,4 +696,6 @@ def make_policy(name: str, cc: ClusterConfig, em: ExecutionModel) -> BasePolicy:
         return PecSchedPolicy(cc, em, coloc=False)
     if name == "pecsched/fsp":
         return PecSchedPolicy(cc, em, fastsp=False)
+    if name == "pecsched/coord":  # §5.2 load-adaptive role coordination
+        return PecSchedPolicy(cc, em, coordination="adaptive")
     raise ValueError(name)

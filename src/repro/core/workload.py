@@ -4,7 +4,6 @@ saturation calibration (§6.6 runs at "the cluster's maximum capacity").
 from __future__ import annotations
 
 import copy
-import dataclasses
 from typing import Dict, List, Tuple
 
 from repro.configs import get_config
@@ -44,7 +43,7 @@ def calibrate_short_capacity(cc: ClusterConfig, em: ExecutionModel, *,
                      long_quantile=2.0)          # no longs
     reqs = generate_trace(tc)
     pol = FIFOPolicy(cc, em)
-    s = Simulator(pol).run(copy.deepcopy(reqs))
+    Simulator(pol).run(copy.deepcopy(reqs))
     done = [r for r in pol.done_requests if not r.is_long]
     if not done:
         return 1.0

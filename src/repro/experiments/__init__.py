@@ -19,6 +19,7 @@ exactly this grid, so "the claims pass" means the same thing everywhere.
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Tuple
 
 from repro.experiments.claims import (CLAIMS, Claim, ClaimResult,
@@ -38,23 +39,62 @@ SMOKE_ENGINE_N = 42
 SMOKE_MODEL = "mistral_7b"
 SMOKE_SEED = 0
 
+#: per-(backend, scenario) workload setup for smoke-grid cells that need a
+#: regime other than the default 0.65-utilization mix.  The coordination
+#: cells (§5.2) pin a prefill-surge regime — high utilization with a light
+#: (summarization-like) decode side, so the decode pool has headroom to
+#: lend — which is exactly the workload class where the static split
+#: underuses the pool.  Values are tuples (frozen-spec friendly); the
+#: arrival_params overrides REPLACE the scenario's default process knobs.
+CELL_SETUP: Dict[Tuple[str, str], Dict] = {
+    ("sim", "bursty"): dict(
+        n_requests=4000, utilization=2.5,
+        overrides=(("output_mu", math.log(30.0)),)),
+    ("sim", "diurnal"): dict(
+        n_requests=4000, utilization=2.0,
+        overrides=(("output_mu", math.log(30.0)),
+                   ("arrival_params", (("period", 40.0), ("depth", 0.9))))),
+    # engine traces span milliseconds (CPU-sized capacity), so the burst /
+    # day-night cycles are compressed to keep several phases in-span
+    ("engine", "bursty"): dict(
+        n_requests=64, utilization=2.5,
+        overrides=(("output_mu", math.log(30.0)),
+                   ("arrival_params", (("burst_factor", 8.0),
+                                       ("burst_frac", 0.2),
+                                       ("mean_cycle", 0.004))))),
+    ("engine", "diurnal"): dict(
+        n_requests=64, utilization=2.5,
+        overrides=(("output_mu", math.log(30.0)),
+                   ("arrival_params", (("period", 0.008),
+                                       ("depth", 0.9))))),
+}
+
 
 def smoke_grid() -> List[ExperimentSpec]:
     """The pinned reduced grid the claims suite replays: every (backend,
-    scenario) cell the registry needs, with the policies its claims read."""
+    scenario) cell the registry needs, with the policies its claims read.
+
+    Engine cells for azure_default replay the pinned `smoke_mini` trace
+    (the engine world's stand-in, see `smoke_sweep_cells`); engine cells
+    for other scenarios run the named scenario directly at the engine
+    cluster's calibrated arrival rate, with any `CELL_SETUP` regime."""
     specs: List[ExperimentSpec] = []
     from repro.experiments.claims import claims_for_scenarios
     for (backend, scenario) in sorted(claims_for_scenarios()):
         pols = policies_needed(scenario, backend)
+        setup = dict(CELL_SETUP.get((backend, scenario), ()))
         if backend == "sim":
-            n = SMOKE_SIM_MT_N if scenario == "multi_tenant" else SMOKE_SIM_N
+            setup.setdefault(
+                "n_requests",
+                SMOKE_SIM_MT_N if scenario == "multi_tenant" else SMOKE_SIM_N)
             specs += grid(pols, scenarios=(scenario,), models=(SMOKE_MODEL,),
-                          backends=("sim",), seeds=(SMOKE_SEED,),
-                          n_requests=n)
+                          backends=("sim",), seeds=(SMOKE_SEED,), **setup)
         else:
-            specs += grid(pols, scenarios=("smoke_mini",),
+            setup.setdefault("n_requests", SMOKE_ENGINE_N)
+            run_as = "smoke_mini" if scenario == "azure_default" else scenario
+            specs += grid(pols, scenarios=(run_as,),
                           models=(SMOKE_MODEL,), backends=("engine",),
-                          seeds=(SMOKE_SEED,), n_requests=SMOKE_ENGINE_N)
+                          seeds=(SMOKE_SEED,), **setup)
     # dedupe (several scenarios share policies)
     seen, out = set(), []
     for s in specs:

@@ -8,7 +8,6 @@ valid cache prefix — the roofline-optimal schedule for decode.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import INPUT_SHAPES, get_config
 from repro.launch import shardings as shd
@@ -54,12 +53,9 @@ def _shape_bytes(type_str: str) -> int:
 def collective_bytes_from_hlo(hlo: str) -> dict:
     """Sum result bytes of every collective op, scaling ops inside while-loop
     bodies by the loop trip count (layer scans appear once in HLO text)."""
-    # computation name -> list of (op_kind, bytes)
-    comp_ops = {}
     comp_name = "entry"
     comp_colls = {comp_name: []}
     calls = []           # (caller_comp, callee_name, is_while_body)
-    trip_counts = {}     # condition computation -> constant bound (heuristic)
     cond_consts = {}
     for line in hlo.splitlines():
         stripped = line.strip()

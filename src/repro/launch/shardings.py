@@ -11,11 +11,9 @@ Profiles (DESIGN.md §5):
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
@@ -131,8 +129,11 @@ def opt_specs(pspecs, opt_shape) -> Any:
                 "vr": P(*parts[:-1]),
                 "vc": P(*(parts[:-2] + parts[-1:]))}
 
-    is_mom = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
-    is_spec = lambda x: isinstance(x, P)
+    def is_mom(x):
+        return isinstance(x, dict) and ("v" in x or "vr" in x)
+
+    def is_spec(x):
+        return isinstance(x, P)
     import jax
     flat_s, treedef = jax.tree.flatten(pspecs, is_leaf=is_spec)
     flat_m = jax.tree.flatten(opt_shape.moments, is_leaf=is_mom)[0]

@@ -7,15 +7,15 @@ seq_len KV cache), train/prefill lower full-sequence steps.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import model as mdl
 from repro.models.sharding import standard_rules, use_rules
-from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+from repro.training.optimizer import adamw_init, adamw_update
 
 AUDIO_DECODER_TRAIN_LEN = 512   # transcript length for enc-dec train batches
 AUDIO_SELF_CACHE = 1024         # decoder self-KV budget (outputs <= 800)

@@ -3,7 +3,6 @@ prefill / cached decode). Parameters are plain pytrees; layer params carry a
 leading L axis and are consumed via lax.scan in model.py."""
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional
 
 import jax

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
 from repro.models.layers import rms_norm
-from repro.models.sharding import constrain, constrain_first
+from repro.models.sharding import constrain_first
 
 
 class SSMState(NamedTuple):
@@ -88,7 +88,6 @@ def mamba2_step(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
     u = jnp.einsum("bd,dp->bp", x, p["in_proj"].astype(x.dtype))
     z, xs, Bm, Cm, dt = jnp.split(u, [di, 2 * di, 2 * di + ns, 2 * di + 2 * ns], axis=-1)
     xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)    # (B, Cd)
-    K = p["conv_w"].shape[0]
     window = jnp.concatenate([state.conv.astype(xbc.dtype), xbc[:, None]], axis=1)  # (B,K,Cd)
     y = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(xbc.dtype)) + p["conv_b"]
     xbc = jax.nn.silu(y)

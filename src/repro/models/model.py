@@ -16,7 +16,6 @@ Cache layout (dict):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -379,7 +378,6 @@ def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
     tokens = batch["tokens"]
     B, S = tokens.shape
     S_total = S + (batch["embeds"].shape[1] if cfg.family == "vlm" else 0)
-    S_max = _cache_maxlen(cache, cfg)
 
     if "kv" in aux:  # stacked (L, B, KV, S_total, hd)
         kvs = aux["kv"]
@@ -422,7 +420,6 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Dict[str, Any],
     """token (B,) int32 -> (logits (B, V), new cache). One serve_step."""
     fam = cfg.family
     dt = _dtype(cfg)
-    B = token.shape[0]
     x = params["embed"][token].astype(dt)                   # (B, d)
     x = constrain(x, "batch", None)
     clen = cache["len"]

@@ -478,6 +478,27 @@ class EngineBackend(ExecutionBackend):
         inline model."""
         self._decode_batch(self._engine(work.replica_ids[0]), work.requests)
 
+    def role_change(self, t: float, rid: int, old_role: str,
+                    new_role: str) -> None:
+        """Verify a coordinator role flip against the real engine: the
+        policy promises the replica is drained, and here that promise meets
+        the hardware.  A live decode slot or resident gang KV on the
+        flipping engine means the policy flipped mid-work — fail loudly
+        instead of serving a role with another role's state resident.
+        Parked per-request KV (`self._kv`) is engine-agnostic host state
+        and migrates at admit time (§5.2), so it needs no action here."""
+        eng = self._engines.get(rid)
+        if eng is not None:
+            live = [r for r in eng.slot_rid if r is not None]
+            resident = [req_rid for req_rid, home in self._resident.items()
+                        if home == rid]
+            if live or resident:
+                raise RuntimeError(
+                    f"unsafe role flip {old_role}->{new_role} on replica "
+                    f"{rid}: live decode slots {live}, resident gang KV "
+                    f"{resident}")
+        self.stats["role_flips"] += 1
+
     def cancel(self, work: Work) -> bool:
         ok = self.sim.cancel(work)
         if ok and self.clock == "analytic":

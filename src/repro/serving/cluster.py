@@ -5,7 +5,8 @@ Historically this module carried its own hardcoded 2-policy decision tree
 (a divergent reimplementation of FIFO/PecSched, including a `_find_idle`
 that ignored its `for_long` parameter, so longs and shorts competed for
 engines identically).  That tree is gone: MiniCluster is now a thin driver
-that binds ANY `make_policy` policy — all nine names, ablations included —
+that binds ANY `make_policy` policy — all ten names, ablations and
+adaptive coordination included —
 to an `EngineBackend`, so the scheduling brain is the same code the
 analytic simulator runs, and long-vs-short placement follows each policy's
 actual rules.

@@ -74,7 +74,6 @@ class ReplicaEngine:
         self.max_slots = max_slots
         self.max_len = max_len
         self.lpq = layers_per_quantum
-        d = cfg.d_model
         KV, hd, nl = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
         dt = jnp.dtype(cfg.dtype)
         self.block_size = block_size

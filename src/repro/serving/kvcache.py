@@ -9,11 +9,10 @@ tables are tiny and scheduler-owned, exactly as in vLLM).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclass

@@ -11,13 +11,12 @@ merged via all-reduce".
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.kernels import ops
 from repro.sp.common import shard_map
 
 
@@ -25,17 +24,13 @@ def distributed_decode_local(q, k, v, cache_len, *, seq_axes,
                              sliding_window: int = 0):
     """Runs INSIDE shard_map. q (B,H,D) replicated; k/v (B,KV,S_loc,D) =
     this rank's KV slice; cache_len (B,) GLOBAL valid length."""
-    p = jax.lax.psum(1, seq_axes)
     idx = jax.lax.axis_index(seq_axes)
     b, h, d = q.shape
     s_loc = k.shape[2]
     start = idx * s_loc
-    # local valid length within this shard
-    loc_len = jnp.clip(cache_len - start, 0, s_loc)
     newest = cache_len - 1
 
     qf = q.astype(jnp.float32)
-    kk = k
     if sliding_window:
         lo = jnp.maximum(newest - sliding_window + 1, 0)   # (B,) global
     else:

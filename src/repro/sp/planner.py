@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Dict
 
 from repro.configs.base import ModelConfig
 
@@ -61,7 +61,6 @@ def stage_costs(cfg: ModelConfig, s: int, T: int, G: int,
     """
     d = cfg.d_model
     Nh, Nkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    heads = Nh + Nkv  # the paper writes (Nh + Nh^KV) for Q+K (V symmetric ~ 2Nkv)
     # --- attention stage ---
     # Megatron SP: all-gather + reduce-scatter of activations
     mg_attn_comm = 2 * s * d * (T - 1) * G

@@ -10,7 +10,6 @@ the paper's "scalable, low-communication" cross-node layer.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

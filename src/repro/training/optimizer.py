@@ -70,7 +70,8 @@ def adamw_update(params, grads, state: AdamWState, *, lr: float = 3e-4,
         delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
         return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_mom
 
-    is_mom = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    def is_mom(x):
+        return isinstance(x, dict) and ("v" in x or "vr" in x)
     flat_p, treedef = jax.tree.flatten(params)
     flat_g = jax.tree.leaves(grads)
     flat_mom = jax.tree.flatten(state.moments, is_leaf=is_mom)[0]

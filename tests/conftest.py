@@ -1,7 +1,6 @@
 """Test config. NOTE: no XLA_FLAGS here — smoke tests and benches must see
 ONE device (harness requirement); multi-device SP tests run in subprocesses
 (tests/multidevice/)."""
-import os
 import sys
 from pathlib import Path
 

@@ -246,6 +246,86 @@ def test_calibrate_sp_scales_fastsp_prefill(cluster):
         em._sp_speedup = {}
 
 
+# ---------------- role coordination across backends ---------------------------
+def coord_trace():
+    """Pinned trace that forces role flips: a short flood with light decode
+    (borrow), a quiet gap (return), then a second flood (borrow again)."""
+    rng = np.random.default_rng(42)
+    reqs, rid = [], 0
+    for wave_start in (0.0, 0.25):
+        for i in range(14):
+            reqs.append(Request(
+                rid=rid, arrival=round(wave_start + i * 5e-05, 9),
+                input_len=int(rng.integers(2500, 3500)),
+                output_len=int(rng.integers(3, 8))))
+            rid += 1
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def coord_cluster(small_model):
+    """3 general + 2 decode replicas: the coordinator can lend one pool
+    replica while the min_decode floor keeps the other pooled."""
+    cfg, _ = small_model
+    cc = ClusterConfig(n_nodes=1, gpus_per_node=5, tp=1,
+                       n_short_decode_replicas=2, max_decode_concurrency=8)
+    return cc, ExecutionModel(cfg, cc.replica_spec(), target_prefill_s=0.5)
+
+
+def test_role_flip_parity_across_backends(coord_cluster, engine_backend):
+    """§5.2 coordination parity: the same pinned trace replayed through
+    SimBackend and EngineBackend (analytic clock) must produce IDENTICAL
+    role-flip decisions — same flips, same order, same timestamps — and
+    the flips must actually happen (non-vacuous)."""
+    cc, em = coord_cluster
+    trace = coord_trace()
+
+    p_sim = make_policy("pecsched/coord", cc, em)
+    p_sim.record_decisions = True
+    Simulator(p_sim).run(copy.deepcopy(trace))
+
+    engine_backend.reset()
+    flips_before = engine_backend.stats["role_flips"]
+    p_eng = make_policy("pecsched/coord", cc, em)
+    p_eng.record_decisions = True
+    Simulator(p_eng, backend=engine_backend).run(copy.deepcopy(trace))
+
+    assert p_sim.role_log, "pinned trace produced no role flips"
+    assert p_sim.role_log == p_eng.role_log          # incl. timestamps
+    assert p_sim.decision_log == p_eng.decision_log
+    assert any(d[0] == "role" for d in p_sim.decision_log)
+    # both directions happened: borrow and return
+    directions = {(old, new) for (_, _, old, new) in p_sim.role_log}
+    assert ("short_decode", "prefill") in directions
+    assert ("prefill", "short_decode") in directions
+    # the engine backend actually vetted the flips against real engines
+    assert engine_backend.stats["role_flips"] - flips_before \
+        == len(p_eng.role_log)
+    # and nothing was stranded on either backend
+    assert {r.rid for r in p_sim.done_requests} == \
+        {r.rid for r in p_eng.done_requests} == {r.rid for r in trace}
+
+
+def test_engine_role_change_rejects_undrained_engine(small_model):
+    """The backend's side of the safe-point contract: flipping a replica
+    whose engine still holds a live decode slot is a policy bug and must
+    fail loudly, not serve a role with another role's KV resident."""
+    cfg, params = small_model
+    be = EngineBackend(cfg, params, max_len=64, layers_per_quantum=1,
+                       clock="analytic")
+    eng = be._engine(0)
+    st = eng.start_prefill(7, jnp.zeros((1, 8), jnp.int32))
+    done = False
+    while not done:
+        st, done = eng.prefill_quantum(st)
+    eng.admit(7, st)                   # live decode slot on engine 0
+    with pytest.raises(RuntimeError, match="unsafe role flip"):
+        be.role_change(0.0, 0, "short_decode", "prefill")
+    eng.evict(0)                       # drained -> the flip is legal
+    be.role_change(0.0, 0, "short_decode", "prefill")
+    assert be.stats["role_flips"] == 1
+
+
 # ---------------- slot exhaustion --------------------------------------------
 def test_admit_raises_slots_full(small_model):
     cfg, params = small_model

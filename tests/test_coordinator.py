@@ -1,0 +1,375 @@
+"""Role-coordination tests (§5.2 load-adaptive prefill/decode split).
+
+* Decision mechanics: watermarks, hysteresis gating, drain marks and their
+  cancellation, the min_decode floor, safe points.
+* System properties: no request is ever stranded by a role flip (every
+  request admitted under a role finishes even if the role flips
+  mid-flight), and hysteresis bounds the flip rate under an adversarial
+  square-wave arrival pattern.
+* Metrics: role-occupancy timeline + utilization-by-role are consistent.
+"""
+import copy
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (ClusterConfig, CoordinatorConfig, ExecutionModel,
+                        Phase, Simulator, get_scenario, make_policy,
+                        paper_cluster)
+from repro.core.request import Request
+from repro.core.schedulers import PecSchedPolicy
+from repro.core.workload import calibrate_short_capacity
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return paper_cluster("mistral_7b")
+
+
+@pytest.fixture(scope="module")
+def capacity(cluster):
+    cc, em = cluster
+    return calibrate_short_capacity(cc, em)
+
+
+def square_wave_trace(rate_hi: float, *, n: int = 3000, period: float = 8.0,
+                      duty: float = 0.5, seed: int = 0):
+    """Adversarial square wave: `duty` of each period at `rate_hi`, the rest
+    silent — the worst case for role thrash (every burst edge invites a
+    borrow, every quiet edge invites a return)."""
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += rng.exponential(1.0 / rate_hi)
+        while (t % period) > period * duty:     # skip the silent half
+            t = (t // period + 1) * period
+        reqs.append(Request(rid=i, arrival=t,
+                            input_len=int(rng.integers(500, 3000)),
+                            output_len=int(rng.integers(5, 40))))
+    return reqs
+
+
+# ---------------- construction / wiring --------------------------------------
+def test_make_policy_coord(cluster):
+    cc, em = cluster
+    p = make_policy("pecsched/coord", cc, em)
+    assert p.name == "pecsched/coord"
+    assert p.coordinator is not None
+    assert p.coordinator.hysteresis_s > 0
+    # static stays static
+    assert make_policy("pecsched", cc, em).coordinator is None
+
+
+def test_bad_coordination_mode_rejected(cluster):
+    cc, em = cluster
+    with pytest.raises(ValueError):
+        PecSchedPolicy(cc, em, coordination="telepathic")
+
+
+def test_dis_has_no_pool_so_no_coordinator(cluster):
+    """/Dis (no disaggregation) has no pool to coordinate: adaptive mode
+    degrades to no coordinator instead of crashing."""
+    cc, em = cluster
+    p = PecSchedPolicy(cc, em, disagg=False, coordination="adaptive")
+    assert p.coordinator is None
+
+
+# ---------------- decision mechanics -----------------------------------------
+
+def _bind_null_backend(p):
+    """Bind a backend whose submit is a no-op: the mechanics tests drive the
+    coordinator directly, with no event loop behind it."""
+    from repro.core.backend import SimBackend
+
+    class _NullBackend(SimBackend):
+        def submit(self, work):
+            pass
+
+    be = _NullBackend()
+    be.sim = None
+    p.bind(be)
+
+def test_borrow_requires_backlog(cluster):
+    cc, em = cluster
+    p = make_policy("pecsched/coord", cc, em)
+    _bind_null_backend(p)
+    pool0 = sum(1 for r in p.replicas if r.role == "short_decode")
+    p.coordinator.step(0.0, p)
+    assert sum(1 for r in p.replicas if r.role == "short_decode") == pool0
+    assert p.role_log == []
+
+
+def test_borrow_fires_on_backlog_and_respects_floor(cluster):
+    cc, em = cluster
+    p = PecSchedPolicy(cc, em, coordination="adaptive",
+                       coordinator_config=CoordinatorConfig(min_decode=1))
+    _bind_null_backend(p)
+    # saturate every prefill-capable replica and queue a deep backlog
+    for r in p.replicas:
+        if r.role != "short_decode":
+            r.work = object()
+    p.short_queue_tokens = 100 * cc.max_batch_tokens
+    p.short_queue.append(Request(rid=0, arrival=0.0, input_len=100,
+                                 output_len=1))
+    t, flipped = 0.0, 0
+    for _ in range(20):                # far more steps than the pool size
+        flipped += len(p.coordinator.step(t, p))
+        t += p.coordinator.hysteresis_s * 1.01
+    pool = [r for r in p.replicas if r.role == "short_decode"]
+    assert len(pool) == 1              # floor respected
+    assert flipped == cc.n_short_decode_replicas - 1
+    assert all(new == "prefill" for (_, _, _, new) in p.role_log)
+
+
+def test_hysteresis_gates_consecutive_borrows(cluster):
+    cc, em = cluster
+    p = make_policy("pecsched/coord", cc, em)
+    _bind_null_backend(p)
+    for r in p.replicas:
+        if r.role != "short_decode":
+            r.work = object()
+    p.short_queue_tokens = 100 * cc.max_batch_tokens
+    p.short_queue.append(Request(rid=0, arrival=0.0, input_len=100,
+                                 output_len=1))
+    assert len(p.coordinator.step(0.0, p)) == 1
+    # a second step inside the window must not initiate another flip
+    assert p.coordinator.step(
+        p.coordinator.hysteresis_s * 0.5, p) == []
+    assert len(p.role_log) == 1
+
+
+def test_loaded_candidate_drains_then_flips(cluster):
+    cc, em = cluster
+    p = make_policy("pecsched/coord", cc, em)
+    _bind_null_backend(p)
+    for r in p.replicas:
+        if r.role != "short_decode":
+            r.work = object()
+    pool = [r for r in p.replicas if r.role == "short_decode"]
+    cand = max(pool, key=lambda r: r.rid)
+    cand.decode_load = 3               # busy: can only drain, not flip
+    p.short_queue_tokens = 100 * cc.max_batch_tokens
+    p.short_queue.append(Request(rid=0, arrival=0.0, input_len=100,
+                                 output_len=1))
+    assert p.coordinator.step(0.0, p) == []
+    assert cand.draining and cand.role == "short_decode"
+    # draining replicas accept no new decode batches
+    p.decode_queue.append(Request(rid=1, arrival=0.0, input_len=100,
+                                  output_len=5))
+    p._drain_decode_queue(0.0)
+    assert cand.decode_load == 3
+    p.decode_queue.clear()
+    # drained -> the flip completes (outside the hysteresis accounting)
+    cand.decode_load = 0
+    flips = p.coordinator.step(1e-7, p)
+    assert flips == [(cand.rid, "short_decode", "prefill")]
+
+
+def test_drain_canceled_when_surge_ends(cluster):
+    cc, em = cluster
+    p = make_policy("pecsched/coord", cc, em)
+    _bind_null_backend(p)
+    for r in p.replicas:
+        if r.role != "short_decode":
+            r.work = object()
+    pool = [r for r in p.replicas if r.role == "short_decode"]
+    cand = max(pool, key=lambda r: r.rid)
+    cand.decode_load = 2
+    p.short_queue_tokens = 100 * cc.max_batch_tokens
+    p.short_queue.append(Request(rid=0, arrival=0.0, input_len=100,
+                                 output_len=1))
+    p.coordinator.step(0.0, p)
+    assert cand.draining
+    # surge over before the drain completed: cancel, don't flip-and-return
+    p.short_queue.clear()
+    p.short_queue_tokens = 0
+    cand.decode_load = 0
+    assert p.coordinator.step(1.0, p) == []
+    assert not cand.draining and cand.role == "short_decode"
+    assert p.role_log == []
+
+
+def test_long_pressure_borrows_with_shallow_backlog(cluster):
+    """The cost-model-priced in-flight-long-prefill signal: a long holding
+    general replicas for >= long_pressure_s triggers a borrow even when the
+    short backlog alone is below the margin watermark."""
+    cc, em = cluster
+    p = make_policy("pecsched/coord", cc, em)
+    _bind_null_backend(p)
+    from repro.core.schedulers import LongState
+    from repro.core.simulator import Work
+    long_req = Request(rid=99, arrival=0.0, input_len=300_000,
+                       output_len=50, is_long=True)
+    rep_ids = [0, 1]
+    w = Work(wid=0, kind="long_prefill", replica_ids=rep_ids,
+             requests=[long_req], start=0.0,
+             duration=p.coordinator.long_pressure_s * 3)
+    for rid in rep_ids:
+        p.replicas[rid].work = w
+        p.replicas[rid].long_rid = 99
+        p.replicas[rid].long_phase = "prefill"
+    p.longs[99] = LongState(req=long_req, rep_ids=rep_ids, sp_mode="fastsp")
+    # shallow backlog: one queued short, far below borrow_margin + idle —
+    # plenty of generals are idle, so the backlog watermark alone would
+    # never fire
+    p.short_queue.append(Request(rid=0, arrival=0.0, input_len=100,
+                                 output_len=1))
+    p.short_queue_tokens = 100
+    assert p.coordinator.inflight_long_prefill_s(0.0, p) >= \
+        p.coordinator.long_pressure_s
+    flips = p.coordinator.step(0.0, p)
+    assert len(flips) == 1 and flips[0][2] == "prefill"
+    # without the long in flight, the same shallow backlog borrows nothing
+    p2 = make_policy("pecsched/coord", cc, em)
+    _bind_null_backend(p2)
+    p2.short_queue.append(Request(rid=0, arrival=0.0, input_len=100,
+                                  output_len=1))
+    p2.short_queue_tokens = 100
+    assert p2.coordinator.step(0.0, p2) == []
+
+
+def test_return_requires_idle_borrowed_replica(cluster):
+    cc, em = cluster
+    p = make_policy("pecsched/coord", cc, em)
+    _bind_null_backend(p)
+    rep = [r for r in p.replicas if r.role == "short_decode"][0]
+    p._flip_role(0.0, rep, "prefill")
+    rep.work = object()                # busy serving a borrowed prefill
+    assert p.coordinator.step(10.0, p) == []
+    assert rep.role == "prefill"
+    rep.work = None                    # safe point: idle
+    flips = p.coordinator.step(20.0, p)
+    assert flips == [(rep.rid, "prefill", "short_decode")]
+
+
+# ---------------- system properties ------------------------------------------
+def test_square_wave_bounds_flip_rate(cluster, capacity):
+    """Adversarial square-wave arrivals: the coordinator must adapt (flips
+    happen) but hysteresis bounds the rate — no per-event thrash."""
+    cc, em = cluster
+    # 8x the FIFO full-service capacity: pecsched offloads decode, so its
+    # prefill side only saturates well above the calibrated yardstick
+    reqs = square_wave_trace(capacity * 8.0, n=3000, period=8.0, duty=0.5)
+    p = make_policy("pecsched/coord", cc, em)
+    s = Simulator(p).run(copy.deepcopy(reqs))
+    assert s["role_flips"] >= 2, "coordinator never adapted"
+    duration = s["t_end"]
+    # one initiation per hysteresis window, one flip per initiation, plus
+    # slack for the final drain-completions
+    bound = duration / p.coordinator.hysteresis_s + 2 * cc.n_short_decode_replicas
+    assert s["role_flips"] <= bound, (s["role_flips"], bound)
+    # and nothing was stranded by the flipping
+    assert s["short_completed"] == s["n_short"]
+    assert s["long_completed"] == s["n_long"]
+
+
+def test_flips_never_strand_requests_scenarios(cluster, capacity):
+    """Every request admitted under a role assignment finishes even though
+    roles flip mid-flight, across the bursty/diurnal claim regimes."""
+    cc, em = cluster
+    for scen, util, ov in (
+            ("bursty", 2.5, {"output_mu": math.log(30.0)}),
+            ("diurnal", 2.0, {"output_mu": math.log(30.0),
+                              "arrival_params": (("period", 40.0),
+                                                 ("depth", 0.9))})):
+        reqs = get_scenario(scen, n_requests=1500, seed=3,
+                            arrival_rps=capacity * util, **ov)
+        p = make_policy("pecsched/coord", cc, em)
+        s = Simulator(p).run(copy.deepcopy(reqs))
+        assert s["role_flips"] > 0, scen
+        assert s["short_completed"] == s["n_short"], scen
+        assert s["long_completed"] == s["n_long"], scen
+        for r in p.all_requests:
+            assert r.phase == Phase.DONE, (scen, r.rid, r.phase)
+
+
+def test_pool_empty_fallback_decodes_in_place(cluster):
+    """min_decode=0: the coordinator may empty the pool entirely; prefill
+    completions then decode in place (the colocated path) instead of
+    waiting on a pool that no longer exists."""
+    _, _ = cluster
+    cc = ClusterConfig(n_nodes=1, gpus_per_node=4, tp=1,
+                       n_short_decode_replicas=1)
+    from repro.configs import get_config
+    em = ExecutionModel(get_config("mistral_7b"), cc.replica_spec())
+    p = PecSchedPolicy(cc, em, coordination="adaptive",
+                       coordinator_config=CoordinatorConfig(min_decode=0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, arrival=i * 1e-4,
+                    input_len=int(rng.integers(2000, 4000)),
+                    output_len=int(rng.integers(5, 30)))
+            for i in range(200)]
+    s = Simulator(p).run(copy.deepcopy(reqs))
+    assert s["short_completed"] == 200
+    borrows = [f for f in p.role_log if f[3] == "prefill"]
+    assert borrows, "pool was never emptied"
+    # the borrowed replica genuinely served under the prefill role (the
+    # occupancy interval closed by set_role is non-degenerate)
+    borrowed = p.replicas[borrows[0][1]]
+    assert borrowed.role_occupancy(s["t_end"]).get("prefill", 0.0) > 0.0
+
+
+# ---------------- hypothesis property ----------------------------------------
+def test_random_traces_never_strand(cluster):
+    pytest.importorskip(
+        "hypothesis",
+        reason="optional dep: pip install -r requirements-dev.txt")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hst
+
+    cc, em = cluster
+
+    @given(seed=hst.integers(0, 1000), n=hst.integers(50, 400),
+           util=hst.floats(0.5, 4.0),
+           min_decode=hst.integers(0, 2))
+    @settings(deadline=None, max_examples=15,
+              suppress_health_check=[HealthCheck.too_slow])
+    def inner(seed, n, util, min_decode):
+        reqs = get_scenario("bursty", n_requests=n, seed=seed,
+                            arrival_rps=40.0 * util)
+        p = PecSchedPolicy(
+            cc, em, coordination="adaptive",
+            coordinator_config=CoordinatorConfig(min_decode=min_decode))
+        s = Simulator(p).run(copy.deepcopy(reqs))
+        done = s["short_completed"] + s["long_completed"]
+        starved = sum(1 for r in p.all_requests if r.phase == Phase.STARVED)
+        assert done + starved == n
+        # starvation can only ever touch longs (Priority semantics), never
+        # shorts mid-role-flip
+        assert all(r.is_long for r in p.all_requests
+                   if r.phase == Phase.STARVED)
+
+    inner()
+
+
+# ---------------- metrics ----------------------------------------------------
+def test_role_metrics_consistent(cluster, capacity):
+    cc, em = cluster
+    reqs = get_scenario("bursty", n_requests=1200, seed=0,
+                        arrival_rps=capacity * 2.5,
+                        output_mu=math.log(30.0))
+    p = make_policy("pecsched/coord", cc, em)
+    s = Simulator(p).run(copy.deepcopy(reqs))
+    assert s["role_flips"] == len(s["role_timeline"]) == len(p.role_log)
+    # occupancy fractions cover all replica-time
+    assert sum(s["role_occupancy"].values()) == pytest.approx(1.0)
+    for role, util in s["role_utilization"].items():
+        assert 0.0 <= util <= 1.0, (role, util)
+    # timeline rows are (t, rid, old, new) with monotone timestamps
+    times = [row[0] for row in s["role_timeline"]]
+    assert times == sorted(times)
+    for _, rid, old, new in s["role_timeline"]:
+        assert old != new
+        assert 0 <= rid < cc.n_replicas
+
+
+def test_static_policies_report_zero_flips(cluster, capacity):
+    cc, em = cluster
+    reqs = get_scenario("bursty", n_requests=300, seed=0,
+                        arrival_rps=capacity)
+    for pol in ("fifo", "pecsched"):
+        p = make_policy(pol, cc, em)
+        s = Simulator(p).run(copy.deepcopy(reqs))
+        assert s["role_flips"] == 0
+        assert "role_timeline" not in s

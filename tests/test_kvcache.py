@@ -1,15 +1,10 @@
 """Paged KV cache: allocation correctness + round-trip exactness + an
 end-to-end check that paged storage reproduces dense-cache decode."""
-import dataclasses
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config, reduced_config
 from repro.kernels import ops
-from repro.models import init_params
 from repro.serving.kvcache import PagedKVCache
 
 

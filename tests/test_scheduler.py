@@ -2,12 +2,11 @@
 a small calibrated trace (full-scale claims run in benchmarks/)."""
 import copy
 
-import numpy as np
 import pytest
 
-from repro.core import (ClusterConfig, ExecutionModel, Phase, Simulator,
-                        TraceConfig, experiment_trace, generate_trace,
-                        make_policy, paper_cluster, trace_stats)
+from repro.core import (Phase, Simulator, TraceConfig, experiment_trace,
+                        generate_trace, make_policy, paper_cluster,
+                        trace_stats)
 
 POLICIES = ["fifo", "reservation", "priority", "pecsched", "pecsched/pe",
             "pecsched/dis", "pecsched/col", "pecsched/fsp"]

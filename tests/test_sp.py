@@ -9,14 +9,12 @@ import subprocess
 import sys
 from pathlib import Path
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.sp.common import finalize, merge_partials
-from repro.sp.planner import TPU_V5E, plan_fast_sp, ring_hop_time, stage_costs
+from repro.sp.planner import plan_fast_sp, ring_hop_time, stage_costs
 
 
 def test_multidevice_sp_equivalence():

@@ -1,16 +1,10 @@
 """End-to-end behaviour tests for the reproduced system."""
 import copy
-import dataclasses
-import subprocess
-import sys
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, reduced_config
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.core import Simulator, experiment_trace, make_policy, paper_cluster
 from repro.launch import steps as st
 
