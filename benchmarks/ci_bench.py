@@ -47,6 +47,10 @@ SIM_CASES = (
     ("fifo_azure_20k", "fifo", "azure_default", 20_000),
     ("pecsched_azure_20k", "pecsched", "azure_default", 20_000),
     ("pecsched_coord_bursty_10k", "pecsched/coord", "bursty", 10_000),
+    # predicted-SJF under bursty arrivals: per-request decode-lane rounds
+    # (+ misprediction evictions) make this the event-loop-heaviest policy;
+    # gated so the lane machinery staying O(log n) is a checked invariant
+    ("sjf_pred_bursty_10k", "sjf_pred", "bursty", 10_000),
 )
 
 

@@ -3,8 +3,9 @@ headline comparison (Figs. 9-11) for one model.
 
 By default this replays the paper's calibrated §6.2 experiment trace; any
 named scenario from the registry (azure_default, bursty, diurnal,
-heavy_tail, multi_tenant, chat_multiturn) or a real Azure-trace-format CSV
-can be swept across the same policy matrix:
+heavy_tail, multi_tenant, chat_multiturn, pred_stress) or a real
+Azure-trace-format CSV can be swept across the same policy matrix, over
+any `make_policy` names via --policies:
 
     PYTHONPATH=src python examples/trace_replay.py [--model mistral_7b]
     PYTHONPATH=src python examples/trace_replay.py --scenario bursty
@@ -20,7 +21,7 @@ from repro.core import (Simulator, experiment_trace, format_profile,
 from repro.core.workload import PAPER_SETUPS, calibrate_short_capacity
 
 POLICIES = ("fifo", "reservation", "priority", "pecsched",
-            "pecsched/pe", "pecsched/fsp")
+            "pecsched/pe", "pecsched/fsp", "sjf_pred", "tail_aware")
 
 
 def build_requests(args, cc, em):
@@ -57,6 +58,10 @@ def main() -> None:
                     help="short load as a fraction of calibrated capacity")
     ap.add_argument("--profile", action="store_true",
                     help="print event-loop counters per policy")
+    ap.add_argument("--policies", default=None,
+                    help="comma-separated policy list (any make_policy "
+                         "name, e.g. sjf_pred:oracle,tail_aware:noisy1.2); "
+                         "default: the headline matrix")
     ap.add_argument("--list-scenarios", action="store_true")
     args = ap.parse_args()
 
@@ -78,7 +83,8 @@ def main() -> None:
           f"({n_long} long)")
     print(f"{'policy':14s} {'qd_p50':>8s} {'qd_p99':>9s} {'rps':>6s} "
           f"{'longJCT':>8s} {'starved':>8s} {'preempt':>8s}")
-    for pol in POLICIES:
+    pols = args.policies.split(",") if args.policies else POLICIES
+    for pol in pols:
         sim = Simulator(make_policy(pol, cc, em))
         s = sim.run(copy.deepcopy(reqs))
         print(f"{pol:14s} {s['short_qd_pct']['50']:8.3f} "

@@ -4,11 +4,16 @@ from repro.core.cluster import ClusterConfig, build_replicas
 from repro.core.coordinator import CoordinatorConfig, RoleCoordinator
 from repro.core.costmodel import ExecutionModel, ReplicaSpec
 from repro.core.metrics import summarize
+from repro.core.predictor import (PREDICTOR_NAMES, AdversarialPredictor,
+                                  BucketedNoisyPredictor, OraclePredictor,
+                                  Predictor, TraceHistoryPredictor,
+                                  make_predictor)
 from repro.core.request import Phase, Request
 from repro.core.scenarios import SCENARIOS, get_scenario, list_scenarios
 from repro.core.schedulers import (POLICY_NAMES, BasePolicy, FIFOPolicy,
-                                   PecSchedPolicy, PriorityPolicy,
-                                   ReservationPolicy, make_policy)
+                                   PecSchedPolicy, PredSJFPolicy,
+                                   PriorityPolicy, ReservationPolicy,
+                                   TailAwarePolicy, make_policy)
 from repro.core.simulator import EventHeap, Simulator, Work, format_profile
 from repro.core.trace import (TraceConfig, generate_trace, load_trace_csv,
                               save_trace_csv, trace_stats)

@@ -80,6 +80,11 @@ def summarize(policy, t_end: float) -> Dict:
             for r in longs])) if longs else 0.0),
         # paper Table 3/6: total suspensions of long requests
         "preemptions": int(getattr(policy, "preemption_events", 0)),
+        # prediction-robustness sweep: decode-lane evictions — a budgeted
+        # decode round exhausted before EOS, i.e. one counted misprediction
+        # (0 for every policy without a predictor)
+        "decode_preemptions": int(
+            getattr(policy, "decode_preemption_events", 0)),
         # paper Table 1: GPU idle rate (Eq. 1)
         "gpu_idle_rate": _idle_rate(policy, t_end),
         # §5.2 coordination: replica role flips performed by the coordinator

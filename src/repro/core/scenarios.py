@@ -11,6 +11,9 @@ across every regime with `get_scenario(name)`:
     bursty          same mix, 2-state MMPP arrivals (quiet/burst cycles)
     heavy_tail      gamma-renewal arrivals (CV 3) + a heavier input-length
                     tail — the Tail-Aware-Scheduling stress regime
+    pred_stress     input-dominated heavy tail + narrow outputs — the
+                    output-length-prediction robustness regime
+                    (experiments/robustness.py)
     diurnal         sinusoidal day/night arrival rate (compressed period)
     multi_tenant    superposed per-tenant streams (chat / summarize /
                     codegen) with distinct rate and length mixes
@@ -103,6 +106,24 @@ def bursty(n_requests: int, seed: int, **overrides) -> List[Request]:
 def heavy_tail(n_requests: int, seed: int, **overrides) -> List[Request]:
     return _azure_mix(n_requests, seed, overrides, arrival_process="gamma",
                       arrival_params=(("cv", 3.0),), input_sigma=2.0)
+
+
+@register_scenario("pred_stress",
+                   "prediction-robustness regime: input-dominated cost, "
+                   "narrow outputs, bursty arrivals")
+def pred_stress(n_requests: int, seed: int, **overrides) -> List[Request]:
+    """The regime where output-length prediction is *decision-relevant*:
+    per-request cost is dominated by a heavy-tailed **observable** input
+    (lognormal σ=2.2, shorts up to 60 K tokens) while outputs are narrow
+    (σ=0.35) — so at σ_err=0 an SJF ordering is near-perfect from the
+    prompt alone, and multiplicative prediction noise on the decode term
+    is what scrambles it.  Gamma CV-3 arrivals provide the transient
+    overloads whose queue-drain *order* sets the p99 short queueing
+    delay (experiments/robustness.py sweeps σ_err over this trace)."""
+    return _azure_mix(n_requests, seed, overrides, arrival_process="gamma",
+                      arrival_params=(("cv", 3.0),), input_sigma=2.2,
+                      input_max=60_000, output_sigma=0.35,
+                      long_quantile=0.997, long_high=250_000)
 
 
 @register_scenario("diurnal",

@@ -19,6 +19,10 @@ PecSchedPolicy      §5 (full system)        Figs.9-11 (overall), Table 6/7
  pecsched/fsp       §6.4 ring-only SP       Fig.14 + Table 3/6 ablation
  pecsched/coord     §5.2 load-adaptive      coordination-vs-static claim
                     role coordination       cells (bursty / diurnal)
+PredSJFPolicy       beyond-paper (ELIS /    prediction-robustness sweep
+ sjf_pred[:pred]    Beyond-Prediction):     (EXPERIMENTS.md §Prediction-
+ tail_aware[:pred]  predicted-SJF + decode- robustness) + pred_* claims
+                    lane preemption
 ================== ======================= ===============================
 
 Dispatch contract with the driver: the Simulator applies every event at a
@@ -36,6 +40,7 @@ and the real-engine mini cluster, unmodified.
 """
 from __future__ import annotations
 
+import heapq
 import itertools
 from collections import deque
 from dataclasses import dataclass
@@ -45,6 +50,7 @@ from repro.core.cluster import (PREFILL_CAPABLE, ClusterConfig, ReplicaState,
                                 build_replicas)
 from repro.core.coordinator import CoordinatorConfig, RoleCoordinator
 from repro.core.costmodel import ExecutionModel
+from repro.core.predictor import Predictor, make_predictor
 from repro.core.request import Phase, Request
 from repro.core.simulator import Work
 
@@ -53,16 +59,22 @@ class BasePolicy:
     name = "base"
 
     def __init__(self, cc: ClusterConfig, em: ExecutionModel, *,
-                 dedicated_decode: bool = False):
+                 dedicated_decode: bool = False,
+                 predictor: Optional[Predictor] = None):
         self.cc = cc
         self.em = em
         self.replicas = build_replicas(cc, dedicated_decode=dedicated_decode)
         self._wid = itertools.count()
         self.sim = None
         self.backend = None
+        #: output-length predictor (core/predictor.py) — the ONLY sanctioned
+        #: path to output-length information at decision time; policies that
+        #: want it go through `predict_output`, never `Request.output_len`
+        self.predictor = predictor
         self.done_requests: List[Request] = []
         self.all_requests: List[Request] = []
         self.preemption_events = 0          # total suspensions (paper Table 3/6)
+        self.decode_preemption_events = 0   # decode-lane evictions (sjf_pred)
         self.per_request_sched: Dict[int, float] = {}
         # cross-backend parity harness: when enabled, every placement,
         # preemption and role-flip decision is appended as a tuple so two
@@ -122,6 +134,17 @@ class BasePolicy:
                 if rep.work is work:
                     rep.work = None
                 rep.add_busy(busy if busy is not None else work.duration)
+
+    def predict_output(self, req: Request,
+                       quantile: Optional[float] = None) -> Optional[float]:
+        """Scheduler-visible output-length estimate for `req` (tokens):
+        the predictor's point estimate, or its `quantile` when hedging.
+        Returns None when the policy carries no predictor."""
+        if self.predictor is None:
+            return None
+        if quantile is not None:
+            return max(self.predictor.quantile(req, quantile), 1.0)
+        return max(self.predictor.predict(req), 1.0)
 
     def _idle_general(self, *, unclaimed=True) -> List[ReplicaState]:
         return [r for r in self.replicas
@@ -669,11 +692,265 @@ class PecSchedPolicy(BasePolicy):
                 r.phase = Phase.STARVED
 
 
+# ===========================================================================
+# Prediction-aware scheduling (beyond-paper: ELIS / Beyond-Prediction).
+# Keys decisions off *predicted* output length — PecSched's observable-input
+# counterpoint — with decode-lane preemption when the prediction was short.
+# ===========================================================================
+class PredSJFPolicy(BasePolicy):
+    """Predicted-shortest-job-first with decode-lane preemption.
+
+    Disaggregated like PecSched (prefill on general replicas, decode on the
+    dedicated decode pool) but the *order* of the one ready queue is
+    predicted total cost: ``prefill_time(input) + decode_time(predict(req))``
+    priced by the calibrated ExecutionModel.  Longs are never preempted —
+    the policy's whole bet is that prediction makes preemption unnecessary,
+    which is exactly what the robustness sweep stresses as σ grows.
+
+    Decode runs per-request on a pool lane with a *budgeted* round
+    (`Work.token_budget` = predicted remaining tokens).  The execution world
+    ends the round early at EOS; if instead the budget exhausts first the
+    prediction was short, and the lane is preempted at that step boundary:
+    the request's KV is parked (SimBackend prices the park+restore swap as
+    two KV migrations; EngineBackend really parks the slot's blocks, see
+    serving/backend.py), the budget escalates geometrically, and the request
+    re-queues for a lane.  `tail_aware` (subclass) hedges by *budgeting*
+    against a high quantile of the predictive distribution while keeping
+    the point-estimate ordering — identical queueing decisions to
+    `sjf_pred`, strictly fewer evictions at the same σ.
+
+    Scheduler-visible information: `req.input_len` (observable) and
+    `self.predictor` via `predict_output`.  `req.output_len` appears only in
+    execution-side pricing (work durations / EOS detection), exactly where
+    the analytic backend stands in for real engines.
+    """
+
+    name = "sjf_pred"
+
+    #: geometric budget escalation after a decode-lane eviction (×2 keeps
+    #: total evictions per request logarithmic in the underprediction ratio)
+    ESCALATION = 2.0
+
+    #: quantile the subclass hedges against; None = point estimate
+    quantile: Optional[float] = None
+
+    def __init__(self, cc, em, *, predictor_spec: str = "noisy0.6",
+                 quantile: Optional[float] = None):
+        super().__init__(cc, em, dedicated_decode=True,
+                         predictor=make_predictor(predictor_spec))
+        if quantile is not None:
+            self.quantile = quantile
+        base = "tail_aware" if self.quantile is not None else "sjf_pred"
+        self.name = f"{base}:{predictor_spec}"
+        self._reqs: Dict[int, Request] = {}
+        self._pred: Dict[int, float] = {}       # rid -> predicted output
+        self._ready: List[tuple] = []           # heap of (cost, rid)
+        self._decode_ready: List[tuple] = []    # heap of (cost, rid)
+        self._dstate: Dict[int, Dict] = {}      # rid -> decode-lane state
+        self._n_general = sum(1 for r in self.replicas
+                              if r.role in PREFILL_CAPABLE) or 1
+        self._decode_pool = ([r for r in self.replicas
+                              if r.role == "short_decode"]
+                             or list(self.replicas))
+
+    # ---- predicted cost (the decision side) ---------------------------
+    def _lane_decode_time(self, output_len: float, context_len: int) -> float:
+        """Per-lane decode pricing: continuous batching gives each stream
+        its own completion time, but iterations share the replica with the
+        other lanes — price at the model's effective batch width so lane
+        throughput matches what batched decode pricing would grant."""
+        return self.em.decode_time(output_len, context_len,
+                                   batch=max(1, self.cc.decode_batch_eff))
+
+    def _total_cost(self, req: Request, pred_out: float) -> float:
+        if req.is_long:
+            R = max(1, min(self.em.replicas_needed(req.input_len),
+                           self._n_general))
+            t = self.em.prefill_time(req.input_len, R, sp_mode="ring")
+        else:
+            t = self.em.prefill_time(req.input_len, 1, sp_mode="local")
+        return t + self._lane_decode_time(pred_out, req.input_len)
+
+    def _push_decode(self, req: Request) -> None:
+        st = self._dstate[req.rid]
+        cost = self._lane_decode_time(st["budget"], req.input_len + st["done"])
+        heapq.heappush(self._decode_ready, (cost, req.rid))
+
+    # ---- event hooks --------------------------------------------------
+    def on_arrival(self, t, req):
+        self.all_requests.append(req)
+        self._reqs[req.rid] = req
+        # ordering always uses the point estimate (so `tail_aware` makes the
+        # same queueing decisions as `sjf_pred`); the quantile hedges only
+        # the decode-lane *budget*, where underprediction costs an eviction
+        point = self.predict_output(req, None)
+        self._pred[req.rid] = (self.predict_output(req, self.quantile)
+                               if self.quantile is not None else point)
+        heapq.heappush(self._ready, (self._total_cost(req, point), req.rid))
+
+    def on_done(self, t, work):
+        if work.kind == "pred_decode":
+            self._decode_round_done(t, work)
+            return
+        self._release(work)
+        if work.kind == "long_full":
+            for r in work.requests:
+                r.phase = Phase.DONE
+                r.finish = t
+                self.done_requests.append(r)
+                self.predictor.observe(r, r.output_len)
+            return
+        # short_prefill: first token is out; hand off to a decode lane with
+        # the predicted remaining budget (everything after the prefill token)
+        for r in work.requests:
+            r.first_token = t
+            r.phase = Phase.MIGRATING
+            self._dstate[r.rid] = {
+                "done": 1,
+                "budget": max(1, int(round(self._pred[r.rid])) - 1),
+                "rounds": 0,
+            }
+            self._push_decode(r)
+
+    # ---- decode lanes -------------------------------------------------
+    def _start_decode_round(self, t, req: Request, rep: ReplicaState):
+        st = self._dstate[req.rid]
+        ctx = req.input_len + st["done"]
+        # execution side: the lane stops at EOS if truth runs out before the
+        # scheduled budget — the analytic clock prices exactly the tokens
+        # that actually run, mirroring what real engines would do
+        run = min(st["budget"], max(req.output_len - st["done"], 0))
+        d = self._lane_decode_time(run, ctx)
+        if st["rounds"] > 0:
+            # re-admission after an eviction: park + restore of the
+            # accumulated KV, priced as two migrations over the interconnect
+            d += 2.0 * self.em.migration_time(ctx)
+            if self.record_decisions:
+                self.decision_log.append(("pred_readmit", req.rid, t))
+        rep.decode_load += 1
+        req.phase = Phase.DECODE
+        w = Work(wid=next(self._wid), kind="pred_decode",
+                 replica_ids=[rep.rid], requests=[req], start=t, duration=d,
+                 token_budget=st["budget"])
+        self._emit(w)
+
+    def _decode_round_done(self, t, work: Work):
+        req = work.requests[0]
+        rep = self.replicas[work.replica_ids[0]]
+        rep.decode_load = max(0, rep.decode_load - 1)
+        rep.add_busy(work.duration)
+        st = self._dstate[req.rid]
+        if st["done"] + st["budget"] >= req.output_len:
+            # EOS fired inside this round — the one place the true length
+            # becomes observable; feed it back to online predictors
+            req.phase = Phase.DONE
+            req.finish = t
+            self.done_requests.append(req)
+            self.predictor.observe(req, req.output_len)
+            del self._dstate[req.rid]
+            return
+        # budget exhausted first: the prediction was short.  Decode-lane
+        # preemption — evict at this step boundary, escalate, re-queue.
+        st["done"] += st["budget"]
+        st["rounds"] += 1
+        st["budget"] = max(st["budget"] + 1,
+                           int(st["budget"] * self.ESCALATION))
+        self.decode_preemption_events += 1
+        req.n_preemptions += 1
+        if self.record_decisions:
+            self.decision_log.append(("pred_evict", req.rid, t))
+        self._push_decode(req)
+
+    # ---- dispatch -----------------------------------------------------
+    def dispatch(self, t):
+        self._dispatch_prefill(t)
+        self._dispatch_decode(t)
+
+    def _dispatch_prefill(self, t):
+        holdback = []
+        while self._ready:
+            idle = [r for r in self.replicas
+                    if r.role in PREFILL_CAPABLE and r.idle
+                    and r.claimed_by is None]
+            if not idle:
+                break
+            cost, rid = heapq.heappop(self._ready)
+            req = self._reqs[rid]
+            if req.is_long:
+                R = max(1, min(self.em.replicas_needed(req.input_len),
+                               self._n_general))
+                if len(idle) < R:
+                    # not enough replicas for the gang *now*: skip the long
+                    # without blocking cheaper work behind it (no HOL)
+                    holdback.append((cost, rid))
+                    continue
+                idle.sort(key=lambda r: r.node)
+                d = (self.em.prefill_time(req.input_len, R, sp_mode="ring")
+                     + self.em.decode_time(req.output_len, req.input_len,
+                                           batch=1))
+                req.phase = Phase.PREFILL
+                req.prefill_start = t
+                self._start(t, "long_full", [req],
+                            [r.rid for r in idle[:R]], d, sp_mode="ring")
+                continue
+            # shorts: pull the next-cheapest shorts into one prefill batch
+            batch, tok = [req], req.input_len
+            while self._ready and tok < self.cc.max_batch_tokens:
+                nxt = self._reqs[self._ready[0][1]]
+                if nxt.is_long or tok + nxt.input_len > self.cc.max_batch_tokens:
+                    break
+                heapq.heappop(self._ready)
+                batch.append(nxt)
+                tok += nxt.input_len
+            for r in batch:
+                r.phase = Phase.PREFILL
+                r.prefill_start = t
+            d = self.em.prefill_time(tok, 1, sp_mode="local")
+            self._start(t, "short_prefill", batch, [idle[0].rid], d)
+        for item in holdback:
+            heapq.heappush(self._ready, item)
+
+    def _dispatch_decode(self, t):
+        while self._decode_ready:
+            lanes = [r for r in self._decode_pool
+                     if r.decode_load < self.cc.max_decode_concurrency]
+            if not lanes:
+                return
+            lanes.sort(key=lambda r: (r.decode_load, r.rid))
+            _, rid = heapq.heappop(self._decode_ready)
+            self._start_decode_round(t, self._reqs[rid], lanes[0])
+
+    def finalize(self, t):
+        for _, rid in self._ready:
+            r = self._reqs[rid]
+            if r.prefill_start is None:
+                r.phase = Phase.STARVED
+
+
+class TailAwarePolicy(PredSJFPolicy):
+    """Beyond-Prediction hedging: budget decode lanes against a high
+    quantile of the predictive distribution.  Ordering stays on the point
+    estimate (same queueing decisions as `sjf_pred`); only the part that
+    matters under error changes — decode budgets overshoot instead of
+    undershooting, trading reserved lane budget for decode-lane evictions."""
+
+    name = "tail_aware"
+    quantile = 0.9
+
+    def __init__(self, cc, em, *, predictor_spec: str = "noisy0.6",
+                 quantile: float = 0.9):
+        super().__init__(cc, em, predictor_spec=predictor_spec,
+                         quantile=quantile)
+
+
 # every name make_policy accepts — the canonical policy matrix consumed by
-# examples, launchers and the cross-backend test sweeps
+# examples, launchers and the cross-backend test sweeps.  `sjf_pred` and
+# `tail_aware` also accept a predictor suffix (``sjf_pred:oracle``,
+# ``sjf_pred:noisy1.2``, ``tail_aware:history``, ``sjf_pred:adversarial``);
+# the bare names default to the mid-σ classifier `noisy0.6`.
 POLICY_NAMES = ("fifo", "fifo_noshort", "reservation", "priority", "pecsched",
                 "pecsched/pe", "pecsched/dis", "pecsched/col", "pecsched/fsp",
-                "pecsched/coord")
+                "pecsched/coord", "sjf_pred", "tail_aware")
 
 
 def make_policy(name: str, cc: ClusterConfig, em: ExecutionModel) -> BasePolicy:
@@ -698,4 +975,10 @@ def make_policy(name: str, cc: ClusterConfig, em: ExecutionModel) -> BasePolicy:
         return PecSchedPolicy(cc, em, fastsp=False)
     if name == "pecsched/coord":  # §5.2 load-adaptive role coordination
         return PecSchedPolicy(cc, em, coordination="adaptive")
+    if name == "sjf_pred" or name.startswith("sjf_pred:"):
+        spec = name.partition(":")[2] or "noisy0.6"
+        return PredSJFPolicy(cc, em, predictor_spec=spec)
+    if name == "tail_aware" or name.startswith("tail_aware:"):
+        spec = name.partition(":")[2] or "noisy0.6"
+        return TailAwarePolicy(cc, em, predictor_spec=spec)
     raise ValueError(name)

@@ -146,6 +146,11 @@ class Work:
     #: long_prefill executes as a gang-scheduled shard_map SP prefill
     #: (fastsp) or on a single replica (ring/local).
     sp_mode: str = "local"
+    #: decode-lane round budget (tokens) for `pred_decode` work: the
+    #: scheduler's *predicted* remaining output length.  Execution stops at
+    #: EOS if truth is shorter; if truth is longer the lane is evicted at
+    #: this step boundary and the request re-queued (decode-lane preemption).
+    token_budget: Optional[int] = None
 
     @property
     def end(self) -> float:

@@ -67,6 +67,13 @@ CELL_SETUP: Dict[Tuple[str, str], Dict] = {
         overrides=(("output_mu", math.log(30.0)),
                    ("arrival_params", (("period", 0.008),
                                        ("depth", 0.9))))),
+    # prediction-robustness cells: deep overload so the queue-drain ORDER
+    # (the thing prediction changes) sets the p99, not raw capacity.  The
+    # gamma renewal process is rate-scale-free, so the engine cell needs no
+    # time compression — only its own (higher) utilization, where the
+    # 2-general-replica cluster reproduces the sim crossover.
+    ("sim", "pred_stress"): dict(n_requests=2500, utilization=8.0),
+    ("engine", "pred_stress"): dict(n_requests=64, utilization=12.0),
 }
 
 

@@ -16,7 +16,7 @@ from typing import Dict, List, Sequence, Tuple
 
 #: bump when summary structure or workload construction changes meaning —
 #: every cached result keyed under the old version stops matching
-SCHEMA_VERSION = 2        # 2: role-coordination fields in metrics.summarize
+SCHEMA_VERSION = 3        # 3: decode_preemptions field in metrics.summarize
 
 BACKENDS = ("sim", "engine")
 

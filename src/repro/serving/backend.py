@@ -69,9 +69,14 @@ from repro.serving.engine import PrefillState, ReplicaEngine, SlotsFull
 from repro.sp.gang import (GangPrefillState, GangSPRunner, gang_degree,
                            make_gang_mesh, plan_for_gang)
 
-# kinds that no policy ever cancels: execute eagerly at submit time
+# kinds that no policy ever cancels: execute eagerly at submit time.
+# `pred_decode` (prediction-aware decode-lane rounds) is eager too: the
+# round's END is its preemption point — the policy decides evict-vs-finish
+# from the budget, never mid-round — so each round runs to completion the
+# moment it is submitted.
 _EAGER_KINDS = ("short_prefill", "short_prefill_coloc", "short_decode",
-                "short_decode_inplace", "short_full", "long_full")
+                "short_decode_inplace", "short_full", "long_full",
+                "pred_decode")
 _PREEMPTIBLE_KINDS = ("long_prefill", "long_decode")
 
 # synthesized-prompt length buckets (limits distinct jit shapes per engine)
@@ -111,6 +116,10 @@ class EngineBackend(ExecutionBackend):
         self._kv: Dict[int, PrefillState] = {}            # prefilled, not decoded
         self._resident: Dict[int, int] = {}               # gang rid -> home replica
         self._parked_scatter: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        # decode-lane preemption (sjf_pred/tail_aware): host-side parked KV
+        # of evicted decode lanes, and cluster-token decode progress per rid
+        self._parked_decode: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._pdone: Dict[int, int] = {}
         self._gang_runners: Dict[Tuple[int, str], GangSPRunner] = {}
         self.generated: Dict[int, List[int]] = {}         # request rid -> tokens
         self.stats = Counter()
@@ -133,6 +142,8 @@ class EngineBackend(ExecutionBackend):
         self._kv.clear()
         self._resident.clear()
         self._parked_scatter.clear()
+        self._parked_decode.clear()
+        self._pdone.clear()
         self.generated.clear()
         self.stats = Counter()
         self.measured_s = 0.0
@@ -386,6 +397,63 @@ class EngineBackend(ExecutionBackend):
                 eng.evict(s)
         return dt
 
+    def _pred_decode_round(self, eng: ReplicaEngine, work: Work) -> float:
+        """One budgeted decode-lane round for the prediction-aware policies.
+
+        The policy schedules `work.token_budget` cluster tokens; truth may
+        end the round early (EOS).  Cluster-token progress maps onto the
+        engine's capped token target proportionally, with the FINAL round
+        (budget covers the true remainder) always decoding to the full
+        target so generations match an uninterrupted run token for token.
+
+        Admission mirrors the two park paths: the first round admits the
+        prefill's parked `PrefillState` (`self._kv`); a round after a
+        decode-lane eviction re-scatters the host-parked paged KV
+        (`scatter_kv` + `bind_slot` — the gang scatter park path).  On a
+        non-final round the slot's KV is gathered host-side, the blocks are
+        released via `evict` (PagedKVCache.release), and the request waits
+        for re-admission: deterministic greedy decode over the exactly
+        preserved KV makes the continuation bit-identical.
+        """
+        req = work.requests[0]
+        rid = req.rid
+        budget = int(work.token_budget or 0)
+        done = self._pdone.get(rid, 1)          # prefill emitted token 1
+        done_after = done + budget
+        final = done_after >= req.output_len
+        T = self._target_new(req)
+        goal = T if final else min(
+            T - 1, 1 + int((T - 1) * done_after / max(req.output_len, 1)))
+        if rid in self._kv:
+            slot = eng.admit(rid, self._kv[rid])
+            del self._kv[rid]
+            self.stats["kv_migrations"] += 1
+        else:
+            k, v = self._parked_decode.pop(rid)
+            eng.scatter_kv(rid, jnp.asarray(k), jnp.asarray(v))
+            slot = eng.bind_slot(rid)
+            self.stats["decode_readmits"] += 1
+        dt = 0.0
+        last = self.generated[rid][-1]
+        for _ in range(max(goal - len(self.generated[rid]), 0)):
+            out, d = self._timed(eng.decode_iteration, {slot: last})
+            dt += d
+            self.stats["decode_iters"] += 1
+            last = out[slot]
+            self.generated[rid].append(last)
+        if final:
+            eng.evict(slot)
+            self._pdone.pop(rid, None)
+        else:
+            # decode-lane preemption at a step boundary: park host-side,
+            # release the blocks for the lane's next tenant
+            k, v = eng.kvpool.gather(rid)
+            self._parked_decode[rid] = (np.asarray(k), np.asarray(v))
+            eng.evict(slot)
+            self._pdone[rid] = done_after
+            self.stats["decode_preemptions"] += 1
+        return dt
+
     def _bind_long_decode(self, req: Request, work_rid: int) -> None:
         """Install the long's decode session from whichever KV path its
         prefill took: parked PrefillState (single-replica), pool-resident
@@ -432,6 +500,8 @@ class EngineBackend(ExecutionBackend):
             for r in work.requests:
                 dt += self._complete_prefill(eng, r)
             dt += self._decode_batch(eng, work.requests)
+        elif kind == "pred_decode":
+            dt += self._pred_decode_round(eng, work)
         else:                               # pragma: no cover - guarded by submit
             raise ValueError(kind)
         self.stats[kind] += 1

@@ -172,9 +172,15 @@ class ReplicaEngine:
         self.kvpool.admit(rid, k, v)
 
     def release_kv(self, rid: int) -> None:
-        """Drop a resident request's blocks (preemption eviction / cleanup)."""
+        """Drop a resident request's blocks (preemption eviction / cleanup).
+
+        Invalidates the cached dense decode view: releasing a rid that is
+        (or was) slot-visible would otherwise leave its stale KV in the
+        cached view until the next admit/bind — the next decode iteration
+        must see the pool without the released blocks."""
         if rid in self.kvpool.tables:
             self.kvpool.release(rid)
+            self._invalidate_view()
 
     def clear(self) -> None:
         """Evict every slot and release every resident request."""
@@ -237,8 +243,7 @@ class ReplicaEngine:
         rid = self.slot_rid[slot]
         self.slot_rid[slot] = None
         if rid is not None:
-            self.release_kv(rid)
-            self._invalidate_view()
+            self.release_kv(rid)    # invalidates the cached dense view
 
     def slot_lengths(self) -> List[int]:
         return [self.kvpool.lengths.get(rid, 0) if rid is not None else 0

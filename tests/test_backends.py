@@ -122,6 +122,50 @@ def test_preempted_long_generates_same_tokens(cluster, engine_backend):
     assert outs["fifo"] == outs["pecsched"]
 
 
+def test_decode_lane_eviction_parity_and_bitexact(cluster, engine_backend):
+    """Predicted-short-turned-long decode-lane preemption across worlds:
+    the pinned mini-trace makes sjf_pred's default noisy predictor
+    underpredict several shorts, so lanes evict mid-decode and re-admit.
+    Sim and engine must log the SAME evict/re-admit decisions (rids and
+    timestamps), the engine must really park + restore KV, and every
+    evicted request's final tokens must be bit-identical to a run where it
+    is never interrupted (FIFO on the same engines)."""
+    cc, em = cluster
+    trace = mini_trace()
+
+    p_sim = make_policy("sjf_pred", cc, em)
+    p_sim.record_decisions = True
+    Simulator(p_sim).run(copy.deepcopy(trace))
+    sim_lane = [d for d in p_sim.decision_log
+                if d[0] in ("pred_evict", "pred_readmit")]
+    assert sim_lane, "pinned trace no longer forces decode-lane eviction"
+
+    engine_backend.reset()
+    p_eng = make_policy("sjf_pred", cc, em)
+    p_eng.record_decisions = True
+    Simulator(p_eng, backend=engine_backend).run(copy.deepcopy(trace))
+    assert p_sim.decision_log == p_eng.decision_log      # incl. timestamps
+    assert p_sim.decode_preemption_events == p_eng.decode_preemption_events
+
+    # the engine actually exercised the park/re-admit machinery...
+    assert engine_backend.stats["decode_preemptions"] > 0
+    assert engine_backend.stats["decode_readmits"] > 0
+    # ...and drained it: nothing left parked, everything fully generated
+    assert not engine_backend._parked_decode
+    assert not engine_backend._pdone
+    evicted = sorted({d[1] for d in sim_lane if d[0] == "pred_evict"})
+    gen = {r.rid: list(engine_backend.generated[r.rid])
+           for r in p_eng.done_requests}
+    for r in p_eng.done_requests:
+        assert len(gen[r.rid]) == engine_backend._target_new(r)
+
+    engine_backend.reset()
+    p_ref = make_policy("fifo", cc, em)
+    Simulator(p_ref, backend=engine_backend).run(copy.deepcopy(trace))
+    for rid in evicted:
+        assert list(engine_backend.generated[rid]) == gen[rid], rid
+
+
 # ---------------- measured-clock sweep ---------------------------------------
 @pytest.fixture(scope="module")
 def measured_backend(small_model):

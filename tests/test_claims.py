@@ -126,6 +126,26 @@ def test_regression_canary(smoke, backend):
     assert "fig12_preempt_delay_ablation" in flipped
 
 
+@pytest.mark.parametrize("backend", ["sim", "engine"])
+def test_predictor_canary(smoke, backend):
+    """The prediction-robustness ledger's teeth: silently swapping the
+    calibrated predictor for the adversarial (inverse-rank) one — the
+    worst-case 'your predictor learned the wrong thing' regression — must
+    flip prediction claims on BOTH backends.  The adversarial arm always
+    underpredicts long outputs, so the oracle's zero-eviction anchor and
+    the sigma-crossover claim both break."""
+    cells = ex.smoke_sweep_cells(smoke["results"])
+    cell = dict(cells[(backend, "pred_stress")])
+    adversarial = cell["sjf_pred:adversarial"]
+    cell["sjf_pred:oracle"] = adversarial
+    cell["sjf_pred:noisy2.0"] = adversarial
+    res = ex.evaluate_claims({(backend, "pred_stress"): cell})
+    flipped = [r.cid for r in res if not r.passed and not r.skipped
+               and r.backend == backend]
+    assert "pred_oracle_zero_evictions" in flipped
+    assert "pred_noise_crossover" in flipped
+
+
 # ---------------- subsystem mechanics ---------------------------------------
 def test_spec_hash_stable_and_sensitive():
     a = ExperimentSpec(policy="fifo")

@@ -1,10 +1,16 @@
 """Paged KV cache: allocation correctness + round-trip exactness + an
 end-to-end check that paged storage reproduces dense-cache decode."""
+import dataclasses
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.configs import get_config, reduced_config
 from repro.kernels import ops
+from repro.models import init_params
+from repro.serving.engine import ReplicaEngine
 from repro.serving.kvcache import PagedKVCache
 
 
@@ -56,6 +62,52 @@ def test_fragmentation_metric():
     z = jnp.zeros((1, 1, 9, 4), jnp.float32)    # 2 blocks for 9 tokens
     pc.admit(0, z, z)
     assert pc.fragmentation() == pytest.approx(1 - 9 / 16)
+
+
+def _prefill(eng, rid, toks):
+    st = eng.start_prefill(rid, toks)
+    done = False
+    while not done:
+        st, done = eng.prefill_quantum(st)
+    return st
+
+
+def test_release_kv_invalidates_cached_decode_view():
+    """Regression: `release_kv` (the slotless cleanup path — gang parks,
+    lane retirement outside `evict`) must drop the cached dense decode
+    view.  Before the fix only `evict` invalidated, so a release left the
+    freed request's KV resident in the cached view: the next decode
+    iteration read stale cache instead of the pool's truth."""
+    cfg = dataclasses.replace(
+        reduced_config(get_config("mistral_7b"), layers=2),
+        dtype="float32", sliding_window=0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    eng = ReplicaEngine(cfg, params, max_slots=2, max_len=64)
+    sA = eng.admit(0, _prefill(eng, 0, jnp.arange(1, 9)[None]))
+    sB = eng.admit(1, _prefill(eng, 1, jnp.arange(11, 23)[None]))
+    out = eng.decode_iteration({sA: 1, sB: 2})   # caches the dense view
+    assert eng._view is not None
+
+    eng.slot_rid[sA] = None       # lane retired without going through evict
+    eng.release_kv(0)             # ...cleanup releases the blocks directly
+    assert eng._view is None, "release_kv left the cached view stale"
+    ck, cv = eng._dense_view()
+    assert not jnp.any(ck[:, sA]) and not jnp.any(cv[:, sA])
+
+    # B's continuation is bit-identical to an engine that retired A through
+    # the normal evict path (the view rebuild changed nothing for B)
+    ref = ReplicaEngine(cfg, params, max_slots=2, max_len=64)
+    rA = ref.admit(0, _prefill(ref, 0, jnp.arange(1, 9)[None]))
+    rB = ref.admit(1, _prefill(ref, 1, jnp.arange(11, 23)[None]))
+    ref_out = ref.decode_iteration({rA: 1, rB: 2})
+    assert ref_out == out
+    ref.evict(rA)
+    for _ in range(3):
+        nxt = eng.decode_iteration({sB: out[sB]})
+        ref_nxt = ref.decode_iteration({rB: ref_out[rB]})
+        assert nxt[sB] == ref_nxt[rB]
+        out, ref_out = nxt, ref_nxt
 
 
 def test_paged_equals_dense_decode_attention():

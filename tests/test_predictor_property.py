@@ -1,0 +1,152 @@
+"""Hypothesis property suite for the output-length predictor interface.
+
+The contract every `core/predictor.py` implementation must honor, checked
+over randomized requests:
+
+* oracle is exact (predict == true output length, floored at 1);
+* the noisy predictor's empirical log-error matches its declared sigma —
+  mean ~ 0 and spread ~ sigma within a CI-style bound — and its √2
+  bucketing never moves a value by more than half a bucket in log space;
+* trace-history quantiles are monotone in q, never below 1 token, and its
+  point estimate converges onto a stationary per-key stream;
+* predictors are read-only observers: neither predict/quantile nor
+  observe may mutate the Request (schedulers hand them live objects).
+"""
+import math
+from dataclasses import asdict
+
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dep: pip install -r requirements-dev.txt")
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.predictor import (BUCKET_RATIO, AdversarialPredictor,
+                                  BucketedNoisyPredictor, OraclePredictor,
+                                  TraceHistoryPredictor, make_predictor)
+from repro.core.request import Request
+
+SET = dict(deadline=None, max_examples=100,
+           suppress_health_check=[HealthCheck.too_slow])
+
+out_lens = st.integers(min_value=1, max_value=5000)
+
+
+def req(rid, output_len, tenant=None, session=None):
+    return Request(rid=rid, arrival=0.0, input_len=64,
+                   output_len=output_len, is_long=False,
+                   tenant=tenant, session=session)
+
+
+# ---------------- oracle ------------------------------------------------------
+@settings(**SET)
+@given(out=out_lens, rid=st.integers(0, 2**31 - 1))
+def test_oracle_exact(out, rid):
+    p = OraclePredictor()
+    r = req(rid, out)
+    assert p.predict(r) == float(max(out, 1))
+    # quantile defaults to the point estimate for a point-mass predictor
+    for q in (0.1, 0.5, 0.9, 0.99):
+        assert p.quantile(r, q) == p.predict(r)
+
+
+# ---------------- bucketed noisy ---------------------------------------------
+@settings(**SET)
+@given(out=out_lens, rid=st.integers(0, 2**31 - 1),
+       sigma=st.floats(0.05, 2.5))
+def test_noisy_bucket_and_determinism(out, rid, sigma):
+    p = BucketedNoisyPredictor(sigma=sigma, seed=3)
+    r = req(rid, out)
+    v = p.predict(r)
+    assert v >= 1.0
+    assert v == p.predict(r)                       # per-rid noise is cached
+    assert v == BucketedNoisyPredictor(sigma=sigma, seed=3).predict(r)
+    # v is a bucket boundary: log_√2(v) is (nearly) integral
+    steps = math.log(v) / math.log(BUCKET_RATIO)
+    assert abs(steps - round(steps)) < 1e-6
+    # quantiles are monotone around the point estimate
+    assert p.quantile(r, 0.1) <= p.quantile(r, 0.5) <= p.quantile(r, 0.9)
+    assert p.quantile(r, 0.9) >= v * math.exp(sigma * 1.28) * 0.999 \
+        or v == 1.0
+
+
+@given(sigma=st.sampled_from([0.3, 0.6, 1.2]))
+@settings(deadline=None, max_examples=6)
+def test_noisy_log_error_matches_sigma(sigma):
+    """Empirical mean/std of log(pred/true) over many rids stays inside a
+    CI-style band around (0, sigma); the √2 bucketing adds at most half a
+    log-bucket of quantization noise on top."""
+    p = BucketedNoisyPredictor(sigma=sigma, seed=0)
+    n, out = 4000, 200
+    errs = [math.log(p.predict(req(rid, out)) / out) for rid in range(n)]
+    mean = sum(errs) / n
+    var = sum((e - mean) ** 2 for e in errs) / (n - 1)
+    half_bucket = 0.5 * math.log(BUCKET_RATIO)
+    # mean: CLT band 3*sigma/sqrt(n) plus the bucketing bias bound
+    assert abs(mean) < 3 * sigma / math.sqrt(n) + half_bucket
+    # spread: sigma plus-or-minus bucket quantization and sampling noise
+    assert abs(math.sqrt(var) - sigma) < half_bucket + 5 * sigma / math.sqrt(n)
+
+
+# ---------------- trace history ----------------------------------------------
+@settings(**SET)
+@given(obs=st.lists(out_lens, min_size=1, max_size=60),
+       qs=st.lists(st.floats(0.01, 0.99), min_size=2, max_size=5))
+def test_history_quantiles_monotone_and_positive(obs, qs):
+    p = TraceHistoryPredictor()
+    for i, o in enumerate(obs):
+        p.observe(req(i, o, tenant="t0"), o)
+    r = req(999, 1, tenant="t0")
+    vals = [p.quantile(r, q) for q in sorted(qs)]
+    assert all(v >= 1.0 for v in vals)
+    assert vals == sorted(vals)                   # monotone in q
+    assert min(obs) <= p.predict(r) <= max(max(obs), 1)
+
+
+@settings(**SET)
+@given(out=out_lens)
+def test_history_converges_on_stationary_stream(out):
+    p = TraceHistoryPredictor(prior=64.0)
+    key = req(0, out, session=7)
+    assert p.predict(key) == 64.0                 # prior before any data
+    for i in range(30):
+        p.observe(req(i, out, session=7), out)
+    assert p.predict(req(99, 1, session=7)) == pytest.approx(max(out, 1.0))
+
+
+def test_history_key_precedence():
+    """session > tenant > global: the most specific key with data wins."""
+    p = TraceHistoryPredictor()
+    p.observe(req(0, 10, tenant="a"), 10)
+    p.observe(req(1, 100, tenant="a", session=5), 100)
+    assert p.predict(req(2, 1, tenant="a", session=5)) == pytest.approx(100.0)
+    # an observation files under its MOST specific key only, so the tenant
+    # pool saw just the session-less request
+    assert p.predict(req(3, 1, tenant="a")) == pytest.approx(10.0)
+    # unseen tenant falls back to the global pool, not the prior
+    assert p.predict(req(4, 1, tenant="zzz")) >= 1.0
+
+
+# ---------------- read-only contract -----------------------------------------
+@settings(**SET)
+@given(out=out_lens, rid=st.integers(0, 2**31 - 1),
+       spec=st.sampled_from(["oracle", "noisy0.6", "history", "adversarial"]))
+def test_predictors_never_mutate_request(out, rid, spec):
+    p = make_predictor(spec, seed=1)
+    r = req(rid, out, tenant="t", session=2)
+    before = asdict(r)
+    p.predict(r)
+    p.quantile(r, 0.9)
+    p.observe(r, out)
+    assert asdict(r) == before
+
+
+def test_make_predictor_specs():
+    assert isinstance(make_predictor("oracle"), OraclePredictor)
+    assert isinstance(make_predictor("adversarial"), AdversarialPredictor)
+    assert isinstance(make_predictor("history"), TraceHistoryPredictor)
+    assert make_predictor("noisy1.5").sigma == pytest.approx(1.5)
+    assert make_predictor("noisy").sigma == pytest.approx(0.6)
+    with pytest.raises(ValueError):
+        make_predictor("psychic")
