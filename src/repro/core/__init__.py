@@ -1,9 +1,9 @@
 from repro.core.arrivals import ARRIVAL_PROCESSES, make_arrivals
 from repro.core.backend import ExecutionBackend, SimBackend
-from repro.core.cluster import ClusterConfig, build_replicas
+from repro.core.cluster import ClusterConfig, ClusterIndex, build_replicas
 from repro.core.coordinator import CoordinatorConfig, RoleCoordinator
 from repro.core.costmodel import ExecutionModel, ReplicaSpec
-from repro.core.metrics import summarize
+from repro.core.metrics import MetricsAccumulator, summarize
 from repro.core.predictor import (PREDICTOR_NAMES, AdversarialPredictor,
                                   BucketedNoisyPredictor, OraclePredictor,
                                   Predictor, TraceHistoryPredictor,

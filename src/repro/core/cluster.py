@@ -16,11 +16,20 @@ A static split (the pre-coordination behaviour) is simply a cluster whose
 roles never change after `build_replicas`.  Role transitions are the
 policy/coordinator's job (core/coordinator.py) and only happen at safe
 points — see RoleCoordinator.
+
+Scheduling-state queries are O(1) through a `ClusterIndex`: the scheduling
+fields of `ReplicaState` (`role`, `work`, `long_rid`, `claimed_by`,
+`draining`, `long_phase`, `decode_load`) are properties whose setters keep
+the index's membership sets current, so dispatch passes read
+incrementally-maintained sets instead of rescanning ``policy.replicas``
+(O(R) per pass — the 1000-replica hot path).  `ClusterIndex.audit()`
+recomputes every set from scratch and raises on drift; the simulator-scale
+property suite runs it after every dispatch pass.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set
 
 from repro.core.costmodel import ReplicaSpec
 from repro.sp.planner import TPU_V5E, HardwareSpec
@@ -56,30 +65,128 @@ class ClusterConfig:
                            hw=self.hw)
 
 
-@dataclass
 class ReplicaState:
-    rid: int
-    node: int
-    role: str = "general"               # general | prefill | short_decode
-    work: Optional[object] = None       # current Work or None
-    claimed_by: Optional[int] = None    # pending long request id
-    # long-request occupancy (this replica is part of a long group)
-    long_rid: Optional[int] = None
-    long_phase: Optional[str] = None    # prefill | decode
-    coloc_tokens: int = 0               # tokens of colocated short prefill
-    decode_load: int = 0                # concurrent short decodes (decode role)
-    busy_time: float = 0.0              # accumulated for idle-rate metric
-    queue_tokens: int = 0               # local queue length in tokens (§6.2)
-    # --- dynamic-role bookkeeping (coordinator + metrics) ---
-    draining: bool = False              # decode replica: admits no NEW decode
-    #                                     batches; flips once decode_load == 0
-    role_since: float = 0.0             # when the current role began
-    role_time: Dict[str, float] = field(default_factory=dict)
-    busy_by_role: Dict[str, float] = field(default_factory=dict)
+    """Per-replica scheduling state.  The fields the dispatch path filters
+    on are properties so every mutation — policies, the coordinator, tests
+    poking `rep.work` directly — flows through the attached `ClusterIndex`."""
+
+    __slots__ = ("rid", "node", "_role", "_work", "_claimed_by", "_long_rid",
+                 "_long_phase", "_coloc_tokens", "_decode_load", "busy_time",
+                 "queue_tokens", "_draining", "role_since", "role_time",
+                 "busy_by_role", "_index")
+
+    def __init__(self, rid: int, node: int, role: str = "general"):
+        self.rid = rid
+        self.node = node
+        self._role = role               # general | prefill | short_decode
+        self._work = None               # current Work or None
+        self._claimed_by = None         # pending long request id
+        # long-request occupancy (this replica is part of a long group)
+        self._long_rid: Optional[int] = None
+        self._long_phase: Optional[str] = None  # prefill | decode
+        self._coloc_tokens = 0          # tokens of colocated short prefill
+        self._decode_load = 0           # concurrent short decodes (decode role)
+        self.busy_time = 0.0            # accumulated for idle-rate metric
+        self.queue_tokens = 0           # local queue length in tokens (§6.2)
+        # --- dynamic-role bookkeeping (coordinator + metrics) ---
+        self._draining = False          # decode replica: admits no NEW decode
+        #                                 batches; flips once decode_load == 0
+        self.role_since = 0.0           # when the current role began
+        self.role_time: Dict[str, float] = {}
+        self.busy_by_role: Dict[str, float] = {}
+        self._index: Optional["ClusterIndex"] = None
+
+    def __repr__(self) -> str:          # pragma: no cover - debug aid
+        return (f"ReplicaState(rid={self.rid}, node={self.node}, "
+                f"role={self._role!r}, idle={self.idle})")
+
+    # ---- indexed scheduling fields -----------------------------------
+    @property
+    def role(self) -> str:
+        return self._role
+
+    @role.setter
+    def role(self, value: str) -> None:
+        self._role = value
+        if self._index is not None:
+            self._index.update(self)
+
+    @property
+    def work(self):
+        return self._work
+
+    @work.setter
+    def work(self, value) -> None:
+        self._work = value
+        if self._index is not None:
+            self._index.avail_changed(self)
+
+    @property
+    def claimed_by(self) -> Optional[int]:
+        return self._claimed_by
+
+    @claimed_by.setter
+    def claimed_by(self, value: Optional[int]) -> None:
+        old = self._claimed_by
+        self._claimed_by = value
+        if self._index is not None:
+            self._index.claim_changed(self, old, value)
+            self._index.occupancy_changed(self)
+
+    @property
+    def long_rid(self) -> Optional[int]:
+        return self._long_rid
+
+    @long_rid.setter
+    def long_rid(self, value: Optional[int]) -> None:
+        self._long_rid = value
+        if self._index is not None:
+            self._index.occupancy_changed(self)
+
+    @property
+    def long_phase(self) -> Optional[str]:
+        return self._long_phase
+
+    @long_phase.setter
+    def long_phase(self, value: Optional[str]) -> None:
+        self._long_phase = value
+        if self._index is not None:
+            self._index.phase_changed(self)
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    @draining.setter
+    def draining(self, value: bool) -> None:
+        self._draining = value
+        if self._index is not None:
+            self._index.draining_changed(self)
+
+    @property
+    def coloc_tokens(self) -> int:
+        return self._coloc_tokens
+
+    @coloc_tokens.setter
+    def coloc_tokens(self, value: int) -> None:
+        self._coloc_tokens = value
+        if self._index is not None:
+            self._index.coloc_changed(self)
+
+    @property
+    def decode_load(self) -> int:
+        return self._decode_load
+
+    @decode_load.setter
+    def decode_load(self, value: int) -> None:
+        old = self._decode_load
+        self._decode_load = value
+        if self._index is not None and self._role == "short_decode":
+            self._index.pool_decode_load += value - old
 
     @property
     def idle(self) -> bool:
-        return self.work is None and self.long_rid is None
+        return self._work is None and self._long_rid is None
 
     # ------------------------------------------------------------------
     def set_role(self, t: float, new_role: str) -> str:
@@ -87,26 +194,278 @@ class ReplicaState:
         interval of the old role.  Returns the old role.  Callers (the
         coordinator) are responsible for only flipping at safe points."""
         assert new_role in ROLES, new_role
-        old = self.role
+        old = self._role
         self.role_time[old] = self.role_time.get(old, 0.0) \
             + max(t - self.role_since, 0.0)
-        self.role = new_role
+        self._role = new_role
         self.role_since = t
-        self.draining = False
+        self._draining = False
+        if self._index is not None:
+            self._index.update(self)
         return old
 
     def add_busy(self, dt: float) -> None:
         """Accumulate busy time, bucketed by the role it was served under."""
         self.busy_time += dt
-        self.busy_by_role[self.role] = self.busy_by_role.get(self.role, 0.0) + dt
+        try:                            # hot: the role key exists after the
+            self.busy_by_role[self._role] += dt     # first interval closes
+        except KeyError:
+            self.busy_by_role[self._role] = dt
 
     def role_occupancy(self, t_end: float) -> Dict[str, float]:
         """Seconds spent in each role up to `t_end` (closes the live
         interval without mutating state)."""
         out = dict(self.role_time)
-        out[self.role] = out.get(self.role, 0.0) \
+        out[self._role] = out.get(self._role, 0.0) \
             + max(t_end - self.role_since, 0.0)
         return out
+
+
+class ClusterIndex:
+    """Incrementally-maintained membership sets over a replica list.
+
+    Every set holds replica ids (ints), kept current by the `ReplicaState`
+    property setters.  Dispatch paths read these instead of rescanning all
+    replicas — the per-pass O(R) -> O(1) change that makes 1000-replica
+    fleets simulable.  Sets and their predicates:
+
+        idle_general    role == "general" and idle and unclaimed
+        idle_prefill    role in PREFILL_CAPABLE and idle and unclaimed
+        free_general    role == "general", in no long group, unclaimed
+                        (busy with short work allowed — the long-claim pool)
+        active_pool     role == "short_decode" and not draining
+        draining_pool   role == "short_decode" and draining
+        by_role[r]      every replica currently holding role r
+        long_decode     long_phase == "decode" (colocation candidates)
+        coloc_room      long_decode members with coloc_tokens headroom
+                        (< max_coloc_tokens); == long_decode when no cap set
+        claims[rid]     replicas claimed by pending long request `rid`
+
+    plus `pool_decode_load`, the summed `decode_load` of the short_decode
+    pool (the coordinator's decode-demand signal, O(1) instead of a sum).
+
+    Selection order contract: callers that need the historical scan order
+    (replica-list order == ascending rid) use `min(set)` / `sorted(set)`,
+    which is identical because rids are dense and list-ordered.
+    """
+
+    __slots__ = ("replicas", "by_role", "idle_general", "idle_prefill",
+                 "free_general", "active_pool", "draining_pool",
+                 "long_decode", "coloc_room",
+                 "max_coloc_tokens", "claims", "pool_decode_load",
+                 "n_queries", "n_rescans")
+
+    def __init__(self, replicas: List[ReplicaState],
+                 max_coloc_tokens: Optional[int] = None):
+        self.replicas = replicas
+        self.max_coloc_tokens = max_coloc_tokens
+        self.by_role: Dict[str, Set[int]] = {r: set() for r in ROLES}
+        self.idle_general: Set[int] = set()
+        self.idle_prefill: Set[int] = set()
+        self.free_general: Set[int] = set()
+        self.active_pool: Set[int] = set()
+        self.draining_pool: Set[int] = set()
+        self.long_decode: Set[int] = set()
+        self.coloc_room: Set[int] = set()
+        self.claims: Dict[int, Set[int]] = {}
+        self.pool_decode_load = 0
+        self.n_queries = 0              # profile: index-backed lookups
+        self.n_rescans = 0              # profile: O(R) fallback scans
+        for rep in replicas:
+            rep._index = self
+            if rep._claimed_by is not None:     # pragma: no cover - defensive
+                self.claims.setdefault(rep._claimed_by, set()).add(rep.rid)
+            if rep._role == "short_decode":
+                self.pool_decode_load += rep._decode_load
+            self.update(rep)
+
+    # ------------------------------------------------------------------
+    # Specialized transitions: each setter touches only the sets its field
+    # can affect.  `work` flips ~200K times per 10K-request replay, so the
+    # difference between these few set ops and the full `update` recompute
+    # is a first-order term in dispatch throughput.  `audit()` checks the
+    # specializations cover their fields' full footprint.
+    def avail_changed(self, rep: ReplicaState) -> None:
+        """`work` changed: only the idle sets (idle ∧ unclaimed) move."""
+        rid = rep.rid
+        if rep._work is None and rep._long_rid is None \
+                and rep._claimed_by is None:
+            role = rep._role
+            if role == "general":
+                self.idle_general.add(rid)
+                self.idle_prefill.add(rid)
+            elif role == "prefill":
+                self.idle_prefill.add(rid)
+        else:
+            self.idle_general.discard(rid)
+            self.idle_prefill.discard(rid)
+
+    def set_work_many(self, reps: List[ReplicaState], w) -> None:
+        """Batch ``rep.work = w`` over a gang (SP long prefill pause/resume
+        touches every group member): one call with the idle-set transitions
+        inlined, instead of a property-setter round-trip per replica."""
+        ig, ip = self.idle_general, self.idle_prefill
+        if w is None:
+            for rep in reps:
+                rep._work = None
+                if rep._long_rid is None and rep._claimed_by is None:
+                    role = rep._role
+                    if role == "general":
+                        ig.add(rep.rid)
+                        ip.add(rep.rid)
+                    elif role == "prefill":
+                        ip.add(rep.rid)
+        else:
+            for rep in reps:
+                rep._work = w
+                rid = rep.rid
+                ig.discard(rid)
+                ip.discard(rid)
+
+    def occupancy_changed(self, rep: ReplicaState) -> None:
+        """`long_rid` or `claimed_by` changed: idle sets + free_general."""
+        self.avail_changed(rep)
+        if rep._role == "general" and rep._long_rid is None \
+                and rep._claimed_by is None:
+            self.free_general.add(rep.rid)
+        else:
+            self.free_general.discard(rep.rid)
+
+    def phase_changed(self, rep: ReplicaState) -> None:
+        """`long_phase` changed: only the colocation-candidate sets move."""
+        if rep._long_phase == "decode":
+            self.long_decode.add(rep.rid)
+            if self.max_coloc_tokens is None \
+                    or rep._coloc_tokens < self.max_coloc_tokens:
+                self.coloc_room.add(rep.rid)
+            else:                       # pragma: no cover - defensive
+                self.coloc_room.discard(rep.rid)
+        else:
+            self.long_decode.discard(rep.rid)
+            self.coloc_room.discard(rep.rid)
+
+    def coloc_changed(self, rep: ReplicaState) -> None:
+        """`coloc_tokens` changed: only headroom membership moves."""
+        if rep._long_phase == "decode" and (
+                self.max_coloc_tokens is None
+                or rep._coloc_tokens < self.max_coloc_tokens):
+            self.coloc_room.add(rep.rid)
+        else:
+            self.coloc_room.discard(rep.rid)
+
+    def draining_changed(self, rep: ReplicaState) -> None:
+        """`draining` changed: only the active/draining pool split moves."""
+        rid = rep.rid
+        if rep._role == "short_decode":
+            if rep._draining:
+                self.active_pool.discard(rid)
+                self.draining_pool.add(rid)
+            else:
+                self.active_pool.add(rid)
+                self.draining_pool.discard(rid)
+        else:
+            self.active_pool.discard(rid)
+            self.draining_pool.discard(rid)
+
+    def update(self, rep: ReplicaState) -> None:
+        """Recompute `rep`'s membership in every set (O(#sets), called from
+        the role setters — any other mutation takes a specialized
+        transition above)."""
+        rid = rep.rid
+        role = rep._role
+        for r, members in self.by_role.items():
+            if r == role:
+                members.add(rid)
+            else:
+                members.discard(rid)
+        idle_unclaimed = (rep._work is None and rep._long_rid is None
+                         and rep._claimed_by is None)
+        if role == "general" and idle_unclaimed:
+            self.idle_general.add(rid)
+        else:
+            self.idle_general.discard(rid)
+        if role in PREFILL_CAPABLE and idle_unclaimed:
+            self.idle_prefill.add(rid)
+        else:
+            self.idle_prefill.discard(rid)
+        if role == "general" and rep._long_rid is None \
+                and rep._claimed_by is None:
+            self.free_general.add(rid)
+        else:
+            self.free_general.discard(rid)
+        if role == "short_decode" and not rep._draining:
+            self.active_pool.add(rid)
+        else:
+            self.active_pool.discard(rid)
+        if role == "short_decode" and rep._draining:
+            self.draining_pool.add(rid)
+        else:
+            self.draining_pool.discard(rid)
+        self.phase_changed(rep)
+
+    def claim_changed(self, rep: ReplicaState, old: Optional[int],
+                      new: Optional[int]) -> None:
+        if old is not None:
+            members = self.claims.get(old)
+            if members is not None:
+                members.discard(rep.rid)
+                if not members:
+                    del self.claims[old]
+        if new is not None:
+            self.claims.setdefault(new, set()).add(rep.rid)
+
+    # ------------------------------------------------------------------
+    def expected(self) -> Dict[str, object]:
+        """Brute-force recomputation of every set from the replica list."""
+        exp: Dict[str, object] = {
+            "by_role": {r: set() for r in ROLES},
+            "idle_general": set(), "idle_prefill": set(),
+            "free_general": set(), "active_pool": set(),
+            "draining_pool": set(),
+            "long_decode": set(), "coloc_room": set(),
+            "claims": {}, "pool_decode_load": 0,
+        }
+        for rep in self.replicas:
+            exp["by_role"][rep._role].add(rep.rid)
+            idle_unclaimed = (rep._work is None and rep._long_rid is None
+                             and rep._claimed_by is None)
+            if rep._role == "general" and idle_unclaimed:
+                exp["idle_general"].add(rep.rid)
+            if rep._role in PREFILL_CAPABLE and idle_unclaimed:
+                exp["idle_prefill"].add(rep.rid)
+            if rep._role == "general" and rep._long_rid is None \
+                    and rep._claimed_by is None:
+                exp["free_general"].add(rep.rid)
+            if rep._role == "short_decode" and not rep._draining:
+                exp["active_pool"].add(rep.rid)
+            if rep._role == "short_decode" and rep._draining:
+                exp["draining_pool"].add(rep.rid)
+            if rep._long_phase == "decode":
+                exp["long_decode"].add(rep.rid)
+                if self.max_coloc_tokens is None \
+                        or rep._coloc_tokens < self.max_coloc_tokens:
+                    exp["coloc_room"].add(rep.rid)
+            if rep._claimed_by is not None:
+                exp["claims"].setdefault(rep._claimed_by, set()).add(rep.rid)
+            if rep._role == "short_decode":
+                exp["pool_decode_load"] += rep._decode_load
+        return exp
+
+    def audit(self) -> None:
+        """Assert the incremental sets equal a from-scratch rescan (the
+        correctness bar for every optimization built on this index)."""
+        exp = self.expected()
+        got = {"by_role": self.by_role, "idle_general": self.idle_general,
+               "idle_prefill": self.idle_prefill,
+               "free_general": self.free_general,
+               "active_pool": self.active_pool,
+               "draining_pool": self.draining_pool,
+               "long_decode": self.long_decode,
+               "coloc_room": self.coloc_room, "claims": self.claims,
+               "pool_decode_load": self.pool_decode_load}
+        for key, want in exp.items():
+            assert got[key] == want, \
+                f"ClusterIndex drift in {key}: {got[key]!r} != {want!r}"
 
 
 def build_replicas(cc: ClusterConfig, *, dedicated_decode: bool) -> List[ReplicaState]:

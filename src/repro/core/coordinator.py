@@ -48,8 +48,6 @@ import math
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-from repro.core.cluster import PREFILL_CAPABLE
-
 
 @dataclass(frozen=True)
 class CoordinatorConfig:
@@ -95,6 +93,7 @@ class RoleCoordinator:
         self.cc = cc
         self.em = em
         self.config = config or CoordinatorConfig()
+        self._mdc = cc.max_decode_concurrency
         batch_s = em.prefill_time(cc.max_batch_tokens, 1, sp_mode="local")
         self.hysteresis_s = max(self.config.hysteresis_batches * batch_s,
                                 self.config.hysteresis_min_s)
@@ -111,9 +110,9 @@ class RoleCoordinator:
             if policy.short_queue_tokens > 0 else 0
 
     def decode_demand(self, policy) -> int:
-        """Queued migrations + in-flight decode load across the pool."""
-        return len(policy.decode_queue) + sum(
-            r.decode_load for r in policy.replicas if r.role == "short_decode")
+        """Queued migrations + in-flight decode load across the pool
+        (the pool-wide load is an O(1) index aggregate)."""
+        return len(policy.decode_queue) + policy.index.pool_decode_load
 
     def inflight_long_prefill_s(self, t: float, policy) -> float:
         """Cost-model seconds of long prefill currently holding general
@@ -135,7 +134,11 @@ class RoleCoordinator:
         """Complete pending drains, then consider at most one new
         transition.  Returns the flips applied this step as
         (rid, old_role, new_role) tuples."""
-        flips = self._complete_drains(t, policy)
+        idx = policy.index
+        if idx.draining_pool:
+            flips = self._complete_drains(t, policy)
+        else:
+            flips = []
         if t - self._last_initiation >= self.hysteresis_s:
             flip = self._consider_transition(t, policy)
             if flip is not None:
@@ -150,20 +153,29 @@ class RoleCoordinator:
     # ------------------------------------------------------------------
     def _complete_drains(self, t: float, policy) -> List[Tuple[int, str, str]]:
         flips = []
-        for rep in policy.replicas:
-            if not (rep.draining and rep.role == "short_decode"
-                    and rep.decode_load == 0):
+        idx = policy.index
+        if not idx.draining_pool:
+            return flips
+        # the rid-order snapshot walks each candidate once, like the old
+        # full replica scan did (membership may change as drains
+        # cancel/flip).  backlog is loop-invariant: the walk only flips
+        # roles / cancels drains, neither of which moves short_queue_tokens
+        backlog = self.backlog_batches(policy)
+        draining = sorted(idx.draining_pool)
+        for rid in draining:
+            rep = policy.replicas[rid]
+            if not (rep._draining and rep._role == "short_decode"
+                    and rep._decode_load == 0):
                 continue
-            if self.backlog_batches(policy) == 0:
+            if backlog == 0:
                 # the surge that motivated the drain is over — cancel the
                 # drain instead of flipping out and straight back
                 rep.draining = False
                 continue
-            remaining_cap = self.cc.max_decode_concurrency * sum(
-                1 for r in policy.replicas
-                if r.role == "short_decode" and not r.draining
-                and r.rid != rep.rid)
-            demand = self.decode_demand(policy)
+            # rep is draining, so it is not in active_pool: the remaining
+            # active capacity is exactly the live active set's
+            remaining_cap = self._mdc * len(idx.active_pool)
+            demand = len(policy.decode_queue) + idx.pool_decode_load
             if policy.decode_queue and remaining_cap == 0:
                 # queued migrations with no other active pool replica —
                 # cancel the drain instead of stranding them
@@ -186,16 +198,22 @@ class RoleCoordinator:
         """One borrow or return initiation; (rid, old, new) for an applied
         flip, (rid, old, None) for a drain mark, None for no-op."""
         cfg = self.config
-        pool = [r for r in policy.replicas if r.role == "short_decode"]
-        active = [r for r in pool if not r.draining]
-        borrowed = [r for r in policy.replicas if r.role == "prefill"]
-        demand = self.decode_demand(policy)
-        active_cap = len(active) * self.cc.max_decode_concurrency
+        idx = policy.index
+        borrowed = idx.by_role["prefill"]
+        backlog = self.backlog_batches(policy)
+        if not borrowed and backlog == 0 and cfg.borrow_margin > 0:
+            # nothing to return, and borrowing needs a short backlog (the
+            # watermark cannot fire at backlog 0 with a positive margin,
+            # and the long-pressure signal requires backlog >= 1)
+            return None
+        active = idx.active_pool
+        demand = len(policy.decode_queue) + idx.pool_decode_load
+        active_cap = len(active) * self._mdc
 
         # ---- return first: decode pressure outranks prefill pressure ----
-        backlog = self.backlog_batches(policy)
         if borrowed and (demand > cfg.return_hi * active_cap or backlog == 0):
-            for rep in borrowed:
+            for rid in sorted(borrowed):            # rid-order scan as before
+                rep = policy.replicas[rid]
                 if rep.work is None:                # safe point: idle
                     old = policy._flip_role(t, rep, "short_decode")
                     return (rep.rid, old, "short_decode")
@@ -204,21 +222,21 @@ class RoleCoordinator:
         # ---- borrow: prefill surge with decode headroom -----------------
         if len(active) <= cfg.min_decode or not active:
             return None
-        idle_prefill = sum(
-            1 for r in policy.replicas
-            if r.role in PREFILL_CAPABLE and r.idle
-            and r.claimed_by is None)
-        long_s = self.inflight_long_prefill_s(t, policy)
-        surging = (backlog - idle_prefill >= cfg.borrow_margin
-                   or (long_s >= self.long_pressure_s and backlog >= 1))
+        idle_prefill = len(idx.idle_prefill)
+        surging = backlog - idle_prefill >= cfg.borrow_margin
+        if not surging and backlog >= 1:
+            # the long-pressure signal walks in-flight longs — priced only
+            # when the cheap backlog watermark alone has not fired
+            surging = self.inflight_long_prefill_s(t, policy) \
+                >= self.long_pressure_s
         if not surging:
             return None
-        remaining_cap = (len(active) - 1) * self.cc.max_decode_concurrency
+        remaining_cap = (len(active) - 1) * self._mdc
         if demand > cfg.borrow_headroom * remaining_cap and remaining_cap > 0:
             return None
         # candidate: the highest-rid active replica (deterministic; the
         # static split puts the pool at the tail, so this unwinds it LIFO)
-        cand = max(active, key=lambda r: r.rid)
+        cand = policy.replicas[max(active)]
         if remaining_cap == 0 and (demand > 0 or cand.decode_load > 0
                                    or policy.decode_queue):
             # emptying the pool entirely is only safe when nothing is

@@ -57,6 +57,47 @@ class ExecutionModel:
         #: degree -> measured fast-SP speedup vs single replica (see
         #: calibrate_sp); empty = use the planner's closed-form estimate
         self._sp_speedup: Dict[int, float] = {}
+        # param counts are pure functions of the (frozen) config; hoist them
+        # out of the per-call path — flops_per_token runs millions of times
+        # in a 1M-request replay
+        self._active_params = cfg.active_param_count()
+        # roofline constants, folded with the exact operand order the
+        # per-call expressions used to evaluate, so the hot paths return
+        # bit-identical latencies (decision parity depends on it).  The
+        # FLOPs terms are integer arithmetic — exact under any grouping.
+        self._fpt_lin = 2 * self._active_params
+        if cfg.family == "ssm":
+            self._fpt_attn = None
+            self._fpt_attn_const = 2 * cfg.num_layers * cfg.d_inner \
+                * cfg.ssm_state * 2
+        else:
+            n_attn2 = cfg.num_layers
+            if cfg.family == "hybrid":
+                n_attn2 = -(-cfg.num_layers // cfg.attn_every)
+            self._fpt_attn = 4 * n_attn2 * cfg.num_heads * cfg.head_dim
+            self._fpt_attn_const = 0
+        self._dec_mem_den = replica.tp * self.hw.hbm_bw
+        self._dec_comp_den = replica.tp * self.hw.flops * self.hw.mfu
+        self._mxu_eff = self.hw.flops * self.hw.mfu
+        # memo tables for the deterministic latency queries (cleared whenever
+        # calibrate_sp changes the model, see _clear_caches); bounded by
+        # _CACHE_CAP so a pathological trace cannot grow them without limit
+        self._prefill_cache: Dict[tuple, float] = {}
+        self._decode_tok_cache: Dict[tuple, float] = {}
+        self._decode_cache: Dict[tuple, float] = {}
+        self._needed_cache: Dict[tuple, int] = {}
+        self._migration_cache: Dict[int, float] = {}
+
+    #: per-table entry cap; on overflow the table is dropped wholesale (the
+    #: queries are cheap enough that a cold restart beats LRU bookkeeping)
+    _CACHE_CAP = 1 << 16
+
+    def _clear_caches(self) -> None:
+        self._prefill_cache.clear()
+        self._decode_tok_cache.clear()
+        self._decode_cache.clear()
+        self._needed_cache.clear()
+        self._migration_cache.clear()
 
     # ------------------------------------------------------------------
     def calibrate_sp(self, per_layer_s: Dict[int, float]) -> None:
@@ -74,6 +115,7 @@ class ExecutionModel:
         self._sp_speedup = {int(d): base / t
                             for d, t in per_layer_s.items()
                             if int(d) >= 2 and t > 0}
+        self._clear_caches()   # memoized prefill times depend on the curve
 
     def sp_speedup(self, n_replicas: int) -> Optional[float]:
         """Calibrated speedup at a degree; degrees never measured scale by
@@ -89,35 +131,23 @@ class ExecutionModel:
     # ------------------------------------------------------------------
     def flops_per_token(self, context_len: int) -> float:
         """Forward FLOPs per token at a given context (2·N_active + attention)."""
-        cfg = self.cfg
-        lin = 2 * cfg.active_param_count()
-        attn_len = context_len
-        if cfg.sliding_window:
-            attn_len = min(context_len, cfg.sliding_window)
-        if cfg.family == "ssm":
-            attn = 2 * cfg.num_layers * cfg.d_inner * cfg.ssm_state * 2
-        else:
-            n_attn = cfg.num_layers
-            if cfg.family == "hybrid":
-                n_attn = -(-cfg.num_layers // cfg.attn_every)
-            attn = 4 * n_attn * cfg.num_heads * cfg.head_dim * attn_len
-        return lin + attn
+        coeff = self._fpt_attn
+        if coeff is None:                   # ssm: context-free state update
+            return self._fpt_lin + self._fpt_attn_const
+        w = self.cfg.sliding_window
+        if w and context_len > w:
+            context_len = w
+        return self._fpt_lin + coeff * context_len
 
     def prefill_flops(self, input_len: int) -> float:
-        cfg = self.cfg
-        lin = 2 * cfg.active_param_count() * input_len
+        lin = self._fpt_lin * input_len
+        if self._fpt_attn is None:
+            return lin + self._fpt_attn_const * input_len
         attn_len = input_len
-        if cfg.sliding_window:
-            attn_len = min(input_len, cfg.sliding_window)
-        if cfg.family == "ssm":
-            attn = 2 * cfg.num_layers * cfg.d_inner * cfg.ssm_state * 2 * input_len
-        else:
-            n_attn = cfg.num_layers
-            if cfg.family == "hybrid":
-                n_attn = -(-cfg.num_layers // cfg.attn_every)
-            attn = 4 * n_attn * cfg.num_heads * cfg.head_dim * \
-                (input_len * attn_len / 2)
-        return lin + attn
+        w = self.cfg.sliding_window
+        if w and attn_len > w:
+            attn_len = w
+        return lin + self._fpt_attn * (input_len * attn_len / 2)
 
     # ------------------------------------------------------------------
     def prefill_time(self, input_len: int, n_replicas: int = 1, *,
@@ -130,11 +160,25 @@ class ExecutionModel:
         Ring-only pays (a) per-hop KV transfer that is NOT overlapped when
         segments are short, and (b) reduced MXU efficiency on short segments
         (paper cites [28]: ring efficiency degrades with ring length).
+        Memoized: the model is deterministic in its arguments (and the
+        fast-SP calibration curve, which clears the table on change).
         """
+        key = (input_len, n_replicas, sp_mode, batch_extra_tokens)
+        hit = self._prefill_cache.get(key)
+        if hit is not None:
+            return hit
+        if len(self._prefill_cache) >= self._CACHE_CAP:
+            self._prefill_cache.clear()
+        val = self._prefill_time(input_len, n_replicas, sp_mode,
+                                 batch_extra_tokens)
+        self._prefill_cache[key] = val
+        return val
+
+    def _prefill_time(self, input_len: int, n_replicas: int, sp_mode: str,
+                      batch_extra_tokens: int) -> float:
         chips = self.replica.tp * max(n_replicas, 1)
         flops = self.prefill_flops(input_len + batch_extra_tokens)
-        eff = self.hw.flops * self.hw.mfu
-        t_comp = flops / (chips * eff)
+        t_comp = flops / (chips * self._mxu_eff)
         if n_replicas <= 1 or sp_mode == "local":
             return t_comp
         seg = max(input_len // n_replicas, 1)
@@ -167,16 +211,22 @@ class ExecutionModel:
 
     def decode_time_per_token(self, context_len: int, batch: int = 1) -> float:
         """Memory-bound decode iteration time (per token, whole batch)."""
-        chips = self.replica.tp
-        weight_traffic = self.active_weight_bytes
+        key = (context_len, batch)
+        hit = self._decode_tok_cache.get(key)
+        if hit is not None:
+            return hit
+        if len(self._decode_tok_cache) >= self._CACHE_CAP:
+            self._decode_tok_cache.clear()
         kv_traffic = batch * (self.kv_per_token *
                               min(context_len,
                                   self.cfg.sliding_window or context_len)
                               + self.state_bytes)
-        t_mem = (weight_traffic + kv_traffic) / (chips * self.hw.hbm_bw)
-        t_comp = batch * self.flops_per_token(context_len) / \
-            (chips * self.hw.flops * self.hw.mfu)
-        return max(t_mem, t_comp)
+        t_mem = (self.active_weight_bytes + kv_traffic) / self._dec_mem_den
+        t_comp = batch * self.flops_per_token(context_len) \
+            / self._dec_comp_den
+        val = max(t_mem, t_comp)
+        self._decode_tok_cache[key] = val
+        return val
 
     def decode_time(self, output_len: int, context_len: int, batch: int = 1
                     ) -> float:
@@ -184,8 +234,16 @@ class ExecutionModel:
         TOGETHER under continuous batching: iteration time is nearly batch-
         independent (weights dominate HBM traffic), so occupancy = iterations
         x iteration time — batching raises throughput, not per-batch speed."""
+        key = (output_len, context_len, batch)
+        hit = self._decode_cache.get(key)
+        if hit is not None:
+            return hit
+        if len(self._decode_cache) >= self._CACHE_CAP:
+            self._decode_cache.clear()
         avg_ctx = context_len + output_len // 2
-        return output_len * self.decode_time_per_token(avg_ctx, batch)
+        val = output_len * self.decode_time_per_token(avg_ctx, batch)
+        self._decode_cache[key] = val
+        return val
 
     # ------------------------------------------------------------------
     def replicas_needed(self, input_len: int, *,
@@ -195,6 +253,12 @@ class ExecutionModel:
         Memory-driven floor (weights + KV must fit) plus a latency-driven
         term: PecSched §5 schedules longs "across a sufficient number of
         model replicas" so SP brings prefill under a latency target."""
+        key = (input_len, target_prefill_s)
+        hit = self._needed_cache.get(key)
+        if hit is not None:
+            return hit
+        if len(self._needed_cache) >= self._CACHE_CAP:
+            self._needed_cache.clear()
         free = self.replica.mem_bytes - self.weight_bytes * 1.05
         if free <= 0:
             raise ValueError(f"{self.cfg.name} does not fit one replica")
@@ -204,11 +268,20 @@ class ExecutionModel:
         tgt = target_prefill_s or self.target_prefill_s
         t1 = self.prefill_time(input_len, 1, sp_mode="local")
         lat_r = max(1, math.ceil(t1 / tgt))
-        return max(mem_r, lat_r)
+        val = max(mem_r, lat_r)
+        self._needed_cache[key] = val
+        return val
 
     def kv_bytes(self, tokens: int) -> float:
         return tokens * self.kv_per_token + self.state_bytes
 
     def migration_time(self, tokens: int) -> float:
         """Short-request KV migration to a decode replica (un-overlapped)."""
-        return self.kv_bytes(tokens) / self.hw.inter_bw
+        hit = self._migration_cache.get(tokens)
+        if hit is not None:
+            return hit
+        if len(self._migration_cache) >= self._CACHE_CAP:
+            self._migration_cache.clear()
+        val = self.kv_bytes(tokens) / self.hw.inter_bw
+        self._migration_cache[tokens] = val
+        return val

@@ -31,11 +31,215 @@ def pct(pct_dict: Optional[Dict], p) -> Optional[float]:
 
 
 def _pct_dict(values: np.ndarray) -> Dict[str, Optional[float]]:
-    return {str(p): float(np.percentile(values, p)) if len(values) else None
-            for p in PCTS}
+    if not len(values):
+        return {str(p): None for p in PCTS}
+    # one vectorized percentile call (one sort) instead of a full pass per
+    # percentile — numerically identical to per-p calls, since each quantile
+    # is interpolated from the same sorted array
+    qs = np.percentile(values, PCTS)
+    return {str(p): float(q) for p, q in zip(PCTS, qs)}
+
+
+class _Buf:
+    """Growable float64 buffer: amortized O(1) append into a typed numpy
+    array, no per-value Python objects — the streaming-metrics container."""
+
+    __slots__ = ("_a", "n")
+
+    def __init__(self, cap: int = 256):
+        self._a = np.empty(cap, dtype=np.float64)
+        self.n = 0
+
+    def add(self, v: float) -> None:
+        a = self._a
+        if self.n == a.shape[0]:
+            self._a = a = np.concatenate(
+                [a, np.empty(a.shape[0], dtype=np.float64)])
+        a[self.n] = v
+        self.n += 1
+
+    def view(self) -> np.ndarray:
+        return self._a[:self.n]
+
+
+class MetricsAccumulator:
+    """Streaming summary state: per-request statistics fold into typed
+    buffers at completion time, so `summarize` never needs the retained
+    `all_requests`/`done_requests` lists — the memory-flat metrics path for
+    million-request replays (`BasePolicy.enable_streaming_metrics`).
+
+    `pending` holds arrived-but-uncompleted requests (bounded by what is
+    queued/in flight, which the policy retains anyway); completed requests
+    leave no reference behind."""
+
+    def __init__(self, em=None):
+        self.em = em
+        self.pending: Dict[int, Request] = {}
+        self.n_short = 0
+        self.n_long = 0
+        self.short_done = 0
+        self.long_done = 0
+        self.short_qd = _Buf()
+        self.short_slow = _Buf()
+        self.long_jct = _Buf()
+        self.long_slow = _Buf()
+        self.long_prefill_start = _Buf()    # NaN == never began service
+        self.min_short_arrival = math.inf
+        self.max_short_finish = -math.inf
+        self.tenants: Dict[str, Dict] = {}
+
+    def _tenant(self, name: str) -> Dict:
+        t = self.tenants.get(name)
+        if t is None:
+            t = self.tenants[name] = {
+                "n": 0, "completed": 0, "qd": _Buf(), "jct": _Buf(),
+                "min_arrival": math.inf, "max_finish": -math.inf}
+        return t
+
+    def arrive(self, req: Request) -> None:
+        self.pending[req.rid] = req
+        if req.is_long:
+            self.n_long += 1
+        else:
+            self.n_short += 1
+            if req.arrival < self.min_short_arrival:
+                self.min_short_arrival = req.arrival
+        if req.tenant is not None:
+            t = self._tenant(req.tenant)
+            t["n"] += 1
+            if req.arrival < t["min_arrival"]:
+                t["min_arrival"] = req.arrival
+
+    def complete(self, req: Request) -> None:
+        self.pending.pop(req.rid, None)
+        jct = req.jct
+        slow = None
+        if self.em is not None and jct is not None:
+            ideal = _ideal_service_time(self.em, req)
+            if ideal and ideal > 0:
+                slow = max(jct / ideal, 0.0)
+        if req.is_long:
+            self.long_done += 1
+            if jct is not None:
+                self.long_jct.add(jct)
+            if slow is not None:
+                self.long_slow.add(slow)
+            ps = req.prefill_start
+            self.long_prefill_start.add(math.nan if ps is None else ps)
+        else:
+            self.short_done += 1
+            qd = req.queueing_delay
+            if qd is not None:
+                self.short_qd.add(qd)
+            if slow is not None:
+                self.short_slow.add(slow)
+            if req.finish is not None and req.finish > self.max_short_finish:
+                self.max_short_finish = req.finish
+        if req.tenant is not None:
+            t = self._tenant(req.tenant)
+            qd = req.queueing_delay
+            if qd is not None:
+                t["qd"].add(qd)
+            if req.phase == Phase.DONE and req.finish is not None:
+                t["completed"] += 1
+                if req.finish > t["max_finish"]:
+                    t["max_finish"] = req.finish
+                if jct is not None:
+                    t["jct"].add(jct)
+
+
+def _summarize_streaming(policy, acc: MetricsAccumulator,
+                         t_end: float) -> Dict:
+    """The streaming twin of `summarize`: same fields, same JSON-stable
+    contract, read from the accumulator's buffers plus the still-pending
+    requests (which are the only Request objects left to inspect).  Counts
+    and percentiles are exactly the retained-mode values; order-sensitive
+    float means agree to ulps (completion order vs arrival order)."""
+    last_arrival = getattr(policy.sim, "last_arrival", t_end) \
+        if policy.sim else t_end
+    pend = list(acc.pending.values())
+    pend_qd = [r.queueing_delay for r in pend
+               if not r.is_long and r.queueing_delay is not None]
+    qd = acc.short_qd.view()
+    if pend_qd:
+        qd = np.concatenate([qd, np.asarray(pend_qd, dtype=np.float64)])
+    short_slow = acc.short_slow.view()
+    long_slow = acc.long_slow.view()
+    # starved longs (paper Table 2): completed ones from the recorded
+    # prefill-start buffer (NaN = never served), pending ones directly
+    ps = acc.long_prefill_start.view()
+    n_starved = int(np.count_nonzero(np.isnan(ps) | (ps > last_arrival)))
+    n_starved += sum(1 for r in pend if r.is_long
+                     and (r.prefill_start is None
+                          or r.prefill_start > last_arrival))
+    if acc.short_done and acc.n_short:
+        short_rps = acc.short_done / max(
+            acc.max_short_finish - acc.min_short_arrival, 1e-9)
+    else:
+        short_rps = 0.0
+    long_jct = acc.long_jct.view()
+    out = {
+        "policy": policy.name,
+        "t_end": float(t_end),
+        "n_short": acc.n_short, "n_long": acc.n_long,
+        "short_completed": acc.short_done,
+        "long_completed": acc.long_done,
+        "short_qd_pct": _pct_dict(qd),
+        "short_qd_mean": float(qd.mean()) if len(qd) else None,
+        "short_rps": short_rps,
+        "long_jct_mean": (float(np.mean(long_jct))
+                          if acc.long_done else None),
+        "long_jct_p99": (float(np.percentile(long_jct, 99))
+                         if acc.long_done else None),
+        "short_slowdown_pct": _pct_dict(short_slow),
+        "short_slowdown_mean": (float(short_slow.mean())
+                                if len(short_slow) else None),
+        "long_slowdown_mean": (float(long_slow.mean())
+                               if len(long_slow) else None),
+        "long_starved_frac": (n_starved / acc.n_long
+                              if acc.n_long else 0.0),
+        "preemptions": int(getattr(policy, "preemption_events", 0)),
+        "decode_preemptions": int(
+            getattr(policy, "decode_preemption_events", 0)),
+        "gpu_idle_rate": _idle_rate(policy, t_end),
+        "role_flips": len(getattr(policy, "role_log", ())),
+    }
+    roles = _role_breakdown(policy, t_end)
+    if roles is not None:
+        out.update(roles)
+    if acc.tenants:
+        pend_tenant_qd: Dict[str, List[float]] = {}
+        for r in pend:
+            if r.tenant is not None and r.queueing_delay is not None:
+                pend_tenant_qd.setdefault(r.tenant, []).append(
+                    r.queueing_delay)
+        per_tenant: Dict[str, Dict] = {}
+        for tenant, t in sorted(acc.tenants.items()):
+            tqd = t["qd"].view()
+            extra = pend_tenant_qd.get(tenant)
+            if extra:
+                tqd = np.concatenate(
+                    [tqd, np.asarray(extra, dtype=np.float64)])
+            span = (t["max_finish"] - t["min_arrival"]
+                    if t["completed"] else 0.0)
+            per_tenant[tenant] = {
+                "n": t["n"],
+                "completed": t["completed"],
+                "qd_mean": float(tqd.mean()) if len(tqd) else None,
+                "qd_pct": _pct_dict(tqd),
+                "rps": (t["completed"] / max(span, 1e-9)
+                        if t["completed"] else 0.0),
+                "jct_mean": (float(np.mean(t["jct"].view()))
+                             if t["completed"] else None),
+            }
+        out["per_tenant"] = per_tenant
+    return out
 
 
 def summarize(policy, t_end: float) -> Dict:
+    acc = getattr(policy, "metrics_acc", None)
+    if acc is not None:
+        return _summarize_streaming(policy, acc, t_end)
     reqs: List[Request] = policy.all_requests
     last_arrival = getattr(policy.sim, "last_arrival", t_end) if policy.sim else t_end
     shorts = [r for r in reqs if not r.is_long]
@@ -229,7 +433,8 @@ def ci95(values: Sequence[float]) -> Dict[str, Optional[float]]:
 #: scalar summary fields worth aggregating across seeds
 AGGREGATE_KEYS = ("short_qd_mean", "short_rps", "long_jct_mean",
                   "long_starved_frac", "preemptions", "gpu_idle_rate",
-                  "short_slowdown_mean", "long_slowdown_mean")
+                  "short_slowdown_mean", "long_slowdown_mean",
+                  "decode_preemptions", "role_flips")
 
 
 def aggregate_seeds(summaries: Iterable[Dict],

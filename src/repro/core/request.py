@@ -16,7 +16,7 @@ class Phase(enum.Enum):
     STARVED = "starved"        # never served by simulation end (Priority)
 
 
-@dataclass
+@dataclass(slots=True)
 class Request:
     rid: int
     arrival: float

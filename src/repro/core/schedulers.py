@@ -46,8 +46,8 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
-from repro.core.cluster import (PREFILL_CAPABLE, ClusterConfig, ReplicaState,
-                                build_replicas)
+from repro.core.cluster import (PREFILL_CAPABLE, ClusterConfig, ClusterIndex,
+                                ReplicaState, build_replicas)
 from repro.core.coordinator import CoordinatorConfig, RoleCoordinator
 from repro.core.costmodel import ExecutionModel
 from repro.core.predictor import Predictor, make_predictor
@@ -64,6 +64,10 @@ class BasePolicy:
         self.cc = cc
         self.em = em
         self.replicas = build_replicas(cc, dedicated_decode=dedicated_decode)
+        #: incrementally-maintained idle/role/claim sets over the replicas;
+        #: every dispatch path reads these instead of O(R) rescans
+        self.index = ClusterIndex(self.replicas,
+                                  max_coloc_tokens=cc.max_coloc_tokens)
         self._wid = itertools.count()
         self.sim = None
         self.backend = None
@@ -73,6 +77,13 @@ class BasePolicy:
         self.predictor = predictor
         self.done_requests: List[Request] = []
         self.all_requests: List[Request] = []
+        #: streaming-metrics accumulator (core/metrics.py).  None (default)
+        #: = retained mode: every Request is kept in all_/done_requests and
+        #: summarize reads them, byte-identical to the historical contract.
+        #: Set via enable_streaming_metrics() for bounded-memory replays:
+        #: per-request stats fold into typed numpy buffers at completion
+        #: and the request lists stay empty.
+        self.metrics_acc = None
         self.preemption_events = 0          # total suspensions (paper Table 3/6)
         self.decode_preemption_events = 0   # decode-lane evictions (sjf_pred)
         self.per_request_sched: Dict[int, float] = {}
@@ -99,6 +110,34 @@ class BasePolicy:
     def dispatch(self, t: float) -> None:
         raise NotImplementedError
 
+    def needs_dispatch(self, t: float) -> bool:
+        """Could dispatch(t) possibly act right now?  The simulator skips
+        the dispatch pass when this is False (dirty-dispatch elision), so a
+        subclass override MUST be proven no-op-equivalent: False only when
+        its dispatch body provably places/preempts/flips nothing.  The base
+        answer is the always-safe True."""
+        return True
+
+    def enable_streaming_metrics(self) -> "BasePolicy":
+        """Switch to streaming metrics: per-request stats accumulate into
+        numpy buffers at completion instead of retaining Request lists —
+        the memory-flat mode for 1M-request replays.  Call before run()."""
+        from repro.core.metrics import MetricsAccumulator
+        self.metrics_acc = MetricsAccumulator(self.em)
+        return self
+
+    def _record_arrival(self, req: Request) -> None:
+        if self.metrics_acc is None:
+            self.all_requests.append(req)
+        else:
+            self.metrics_acc.arrive(req)
+
+    def _complete_request(self, req: Request) -> None:
+        if self.metrics_acc is None:
+            self.done_requests.append(req)
+        else:
+            self.metrics_acc.complete(req)
+
     # ------------------------------------------------------------------
     def _start(self, t: float, kind: str, reqs: List[Request],
                rep_ids: List[int], duration: float, *, colocated=False,
@@ -106,13 +145,15 @@ class BasePolicy:
         w = Work(wid=next(self._wid), kind=kind, replica_ids=rep_ids,
                  requests=reqs, start=t, duration=duration, colocated=colocated,
                  sp_mode=sp_mode)
-        for rid in rep_ids:
-            rep = self.replicas[rid]
-            if colocated:
-                rep.coloc_tokens += sum(r.input_len for r in reqs) // max(len(rep_ids), 1)
-            else:
-                assert rep.work is None, f"replica {rid} busy"
-                rep.work = w
+        if colocated:
+            tok_share = sum(r.input_len for r in reqs) // max(len(rep_ids), 1)
+            for rid in rep_ids:
+                self.replicas[rid].coloc_tokens += tok_share
+        else:
+            reps = [self.replicas[rid] for rid in rep_ids]
+            for rep in reps:
+                assert rep._work is None, f"replica {rep.rid} busy"
+            self.index.set_work_many(reps, w)
         self._emit(w)
         return w
 
@@ -124,16 +165,42 @@ class BasePolicy:
         self.backend.submit(w)
 
     def _release(self, work: Work, *, busy: Optional[float] = None) -> None:
-        for rid in work.replica_ids:
+        if work.colocated:
+            tok_share = sum(r.input_len for r in work.requests) \
+                // max(len(work.replica_ids), 1)
+            for rid in work.replica_ids:
+                rep = self.replicas[rid]
+                rep.coloc_tokens = max(0, rep.coloc_tokens - tok_share)
+            return
+        dt = busy if busy is not None else work.duration
+        rids = work.replica_ids
+        if len(rids) == 1:                   # hot path: short/decode work
+            rep = self.replicas[rids[0]]
+            rep.busy_time += dt
+            bbr = rep.busy_by_role
+            try:
+                bbr[rep._role] += dt
+            except KeyError:
+                bbr[rep._role] = dt
+            if rep._work is work:
+                self.index.set_work_many((rep,), None)
+            return
+        cleared = []
+        for rid in rids:
             rep = self.replicas[rid]
-            if work.colocated:
-                rep.coloc_tokens = max(
-                    0, rep.coloc_tokens - sum(r.input_len for r in work.requests)
-                    // max(len(work.replica_ids), 1))
-            else:
-                if rep.work is work:
-                    rep.work = None
-                rep.add_busy(busy if busy is not None else work.duration)
+            if rep._work is work:
+                cleared.append(rep)
+            # add_busy inlined: SP gang pause/resume releases run this loop
+            # tens of thousands of times per replay
+            rep.busy_time += dt
+            role = rep._role
+            bbr = rep.busy_by_role
+            try:
+                bbr[role] += dt
+            except KeyError:
+                bbr[role] = dt
+        if cleared:
+            self.index.set_work_many(cleared, None)
 
     def predict_output(self, req: Request,
                        quantile: Optional[float] = None) -> Optional[float]:
@@ -147,9 +214,12 @@ class BasePolicy:
         return max(self.predictor.predict(req), 1.0)
 
     def _idle_general(self, *, unclaimed=True) -> List[ReplicaState]:
-        return [r for r in self.replicas
-                if r.role == "general" and r.idle
-                and (not unclaimed or r.claimed_by is None)]
+        if unclaimed:
+            # index-backed: ascending rid == the replica-list scan order
+            self.index.n_queries += 1
+            return [self.replicas[i] for i in sorted(self.index.idle_general)]
+        self.index.n_rescans += 1
+        return [r for r in self.replicas if r.role == "general" and r.idle]
 
     def _flip_role(self, t: float, rep: ReplicaState, new_role: str) -> str:
         """Apply a coordinator role flip: transition the replica, record it
@@ -196,7 +266,7 @@ class FIFOPolicy(BasePolicy):
         self.admit_long = admit_long
 
     def on_arrival(self, t, req):
-        self.all_requests.append(req)
+        self._record_arrival(req)
         if req.is_long and not self.admit_long:
             return
         self.queue.append(req)
@@ -206,7 +276,7 @@ class FIFOPolicy(BasePolicy):
         for r in work.requests:
             r.phase = Phase.DONE
             r.finish = t
-            self.done_requests.append(r)
+            self._complete_request(r)
 
     def _run_short_batch(self, t, reqs, rep: ReplicaState):
         tokens = sum(r.input_len for r in reqs)
@@ -228,24 +298,29 @@ class FIFOPolicy(BasePolicy):
         self._start(t, "long_full", [req], [r.rid for r in reps], d,
                     sp_mode="ring")
 
+    def needs_dispatch(self, t):
+        return bool(self.queue)
+
     def dispatch(self, t):
+        idle = self.index.idle_general
         while self.queue:
             head = self.queue[0]
-            idle = self._idle_general()
             if head.is_long:
                 R = self.em.replicas_needed(head.input_len)
                 if len(idle) < R:
                     return                      # head-of-line blocking
                 self.queue.popleft()
-                idle.sort(key=lambda r: r.node)  # same-node preference
-                self._run_long(t, head, idle[:R])
+                # ascending rid == rid-order scan + stable node sort (node
+                # is monotonic in rid), i.e. the same-node preference
+                reps = [self.replicas[i] for i in sorted(idle)[:R]]
+                self._run_long(t, head, reps)
             else:
                 if not idle:
                     return
                 batch = self._batch_shorts(self.queue, self.cc.max_batch_tokens)
                 # FIFO: batch must not skip over a long head; _batch_shorts only
                 # pulls consecutive heads, preserving order.
-                self._run_short_batch(t, batch, idle[0])
+                self._run_short_batch(t, batch, self.replicas[min(idle)])
 
     def _batch_shorts(self, queue, max_tokens):
         batch, tok = [], 0
@@ -276,30 +351,33 @@ class ReservationPolicy(FIFOPolicy):
         self.long_queue: deque = deque()
 
     def on_arrival(self, t, req):
-        self.all_requests.append(req)
+        self._record_arrival(req)
         (self.long_queue if req.is_long else self.short_queue).append(req)
 
+    def needs_dispatch(self, t):
+        return bool(self.short_queue or self.long_queue)
+
     def dispatch(self, t):
-        # long side
+        # long side (reserved replicas are always general and never claimed,
+        # so idle membership is exactly the idle_general index)
         while self.long_queue:
-            idle = [r for r in self.replicas
-                    if r.rid in self.reserved and r.idle]
+            avail = self.index.idle_general & self.reserved
             head = self.long_queue[0]
             # the reserved pool is sized to *hold* a 500K request; a request
             # never demands more replicas than the pool provides
             R = min(self.em.replicas_needed(head.input_len), len(self.reserved))
-            if len(idle) < R:
+            if len(avail) < R:
                 break
             self.long_queue.popleft()
-            self._run_long(t, head, idle[:R])
+            self._run_long(t, head,
+                           [self.replicas[i] for i in sorted(avail)[:R]])
         # short side
         while self.short_queue:
-            idle = [r for r in self.replicas
-                    if r.rid not in self.reserved and r.idle]
-            if not idle:
+            avail = self.index.idle_general - self.reserved
+            if not avail:
                 break
             batch = self._batch_shorts(self.short_queue, self.cc.max_batch_tokens)
-            self._run_short_batch(t, batch, idle[0])
+            self._run_short_batch(t, batch, self.replicas[min(avail)])
 
     def _batch_shorts(self, queue, max_tokens):
         batch, tok = [], 0
@@ -323,25 +401,28 @@ class PriorityPolicy(FIFOPolicy):
         self.long_queue: deque = deque()
 
     def on_arrival(self, t, req):
-        self.all_requests.append(req)
+        self._record_arrival(req)
         (self.long_queue if req.is_long else self.short_queue).append(req)
 
+    def needs_dispatch(self, t):
+        return bool(self.short_queue or self.long_queue)
+
     def dispatch(self, t):
+        idle = self.index.idle_general
         while self.short_queue:
-            idle = self._idle_general()
             if not idle:
                 return
             batch = ReservationPolicy._batch_shorts(self, self.short_queue,
                                                     self.cc.max_batch_tokens)
-            self._run_short_batch(t, batch, idle[0])
+            self._run_short_batch(t, batch, self.replicas[min(idle)])
         while self.long_queue and not self.short_queue:
-            idle = self._idle_general()
             head = self.long_queue[0]
             R = self.em.replicas_needed(head.input_len)
             if len(idle) < R:
                 return
             self.long_queue.popleft()
-            self._run_long(t, head, idle[:R])
+            self._run_long(t, head,
+                           [self.replicas[i] for i in sorted(idle)[:R]])
 
     def finalize(self, t):
         for r in self.long_queue:
@@ -356,6 +437,10 @@ class LongState:
     req: Request
     rep_ids: List[int]
     phase: str = "prefill"              # prefill | decode
+    #: placement order (monotonic per policy) — preemption tie-breaks on it
+    #: so victim selection over an unordered set reproduces the historical
+    #: first-max-in-`longs`-insertion-order scan exactly
+    seq: int = 0
     paused: bool = False
     remaining: float = 0.0              # seconds of work left when paused
     decode_remaining: float = 0.0
@@ -398,6 +483,13 @@ class PecSchedPolicy(BasePolicy):
         self.short_queue_tokens = 0              # incremental backlog signal
         self.long_queue: deque = deque()
         self.longs: Dict[int, LongState] = {}    # rid -> state
+        self._long_seq = 0                       # LongState.seq source
+        # incrementally-maintained preemption views over `longs`: rebuilding
+        # the victim list per dispatch pass was an O(live longs) scan on the
+        # hottest path (saturated short pressure dispatches every batch)
+        self._paused: Dict[int, LongState] = {}  # suspended longs
+        self._victims: Dict[int, LongState] = {} # preemptable: unpaused and
+        #                                          prefill (or decode w/o CoL)
         self.decode_queue: deque = deque()       # shorts waiting for decode pool
         suffix = []
         if not preemption:
@@ -413,7 +505,7 @@ class PecSchedPolicy(BasePolicy):
 
     # ------------------------------------------------------------------
     def on_arrival(self, t, req):
-        self.all_requests.append(req)
+        self._record_arrival(req)
         if req.is_long:
             self.long_queue.append(req)
         else:
@@ -431,8 +523,7 @@ class PecSchedPolicy(BasePolicy):
         replicas finish their in-flight load but take nothing new; with the
         pool empty (coordinator borrowed everything), completions decode in
         place — the colocated path — so nothing waits on an empty pool."""
-        return any(r.role == "short_decode" and not r.draining
-                   for r in self.replicas)
+        return bool(self.index.active_pool)
 
     # ------------------------------------------------------------------
     def on_done(self, t, work):
@@ -462,9 +553,11 @@ class PecSchedPolicy(BasePolicy):
             self._release(work)
             self._finish_requests(t, work.requests)
         elif work.kind == "short_decode":
+            n = len(work.requests)
             for rid in work.replica_ids:
-                self.replicas[rid].decode_load -= len(work.requests)
-                self.replicas[rid].add_busy(work.duration)
+                rep = self.replicas[rid]
+                rep.decode_load = rep._decode_load - n
+                rep.add_busy(work.duration)
             self._finish_requests(t, work.requests)
             self._drain_decode_queue(t)
         elif work.kind == "short_prefill_coloc":
@@ -485,6 +578,8 @@ class PecSchedPolicy(BasePolicy):
             st = self.longs[req.rid]
             req.first_token = t
             st.phase = "decode"
+            if self.coloc:              # long decode not preemptable w/ CoL
+                self._victims.pop(req.rid, None)
             for rid in st.rep_ids:
                 self.replicas[rid].long_phase = "decode"
             d = self.em.decode_time(req.output_len, req.input_len, batch=1) \
@@ -496,13 +591,14 @@ class PecSchedPolicy(BasePolicy):
             self._release(work)
             req = work.requests[0]
             st = self.longs.pop(req.rid)
+            self._victims.pop(req.rid, None)
             for rid in st.rep_ids:
                 rep = self.replicas[rid]
                 rep.long_rid = None
                 rep.long_phase = None
             req.phase = Phase.DONE
             req.finish = t
-            self.done_requests.append(req)
+            self._complete_request(req)
         else:
             raise ValueError(work.kind)
 
@@ -514,23 +610,34 @@ class PecSchedPolicy(BasePolicy):
                     r.output_len, r.input_len, batch=8)
             r.phase = Phase.DONE
             r.finish = t
-            self.done_requests.append(r)
+            self._complete_request(r)
 
     # ------------------------------------------------------------------
     def _drain_decode_queue(self, t):
-        pool = [r for r in self.replicas
-                if r.role == "short_decode" and not r.draining]
+        dq = self.decode_queue
+        if not dq:
+            return
+        pool = self.index.active_pool
         if not pool:
             return
-        while self.decode_queue:
-            pool.sort(key=lambda r: r.decode_load)
-            rep = pool[0]
-            cap = self.cc.max_decode_concurrency - rep.decode_load
+        reps = self.replicas
+        mdc = self.cc.max_decode_concurrency
+        while dq:
+            # least-loaded active replica, rid tie-break — the same pick the
+            # historical rid-sorted list + stable load sort made, without
+            # rebuilding and re-sorting a list per emitted batch
+            best = None
+            for i in pool:
+                k = (reps[i]._decode_load, i)
+                if best is None or k < best:
+                    best = k
+            rep = reps[best[1]]
+            cap = mdc - best[0]
             if cap <= 0:
                 return
             batch = []
-            while self.decode_queue and len(batch) < cap:
-                batch.append(self.decode_queue.popleft())
+            while dq and len(batch) < cap:
+                batch.append(dq.popleft())
             max_out = max(r.output_len for r in batch)
             avg_in = sum(r.input_len for r in batch) // len(batch)
             d = self.em.decode_time(max_out, avg_in, batch=len(batch))
@@ -570,12 +677,17 @@ class PecSchedPolicy(BasePolicy):
                     st.decode_remaining = max(w.duration - elapsed, 0.0)
                 self._release(w, busy=elapsed)
         st.paused = True
+        self._victims.pop(st.req.rid, None)
+        self._paused[st.req.rid] = st
         st.req.phase = Phase.PAUSED
         st.req.n_preemptions += 1
         self.preemption_events += 1
 
     def _resume_long(self, t, st: LongState):
         st.paused = False
+        del self._paused[st.req.rid]
+        if st.phase == "prefill" or not self.coloc:
+            self._victims[st.req.rid] = st
         if st.phase == "prefill":
             st.req.phase = Phase.PREFILL
             self._start(t, "long_prefill", [st.req], st.rep_ids, st.remaining,
@@ -586,90 +698,124 @@ class PecSchedPolicy(BasePolicy):
                         st.decode_remaining)
 
     # ------------------------------------------------------------------
+    def needs_dispatch(self, t):
+        if self.short_queue or self.long_queue or self._paused:
+            return True
+        if self.coordinator is not None:
+            # with empty queues the coordinator can only act on borrowed
+            # replicas (return them) or draining ones (complete the drain);
+            # borrowing itself requires a short backlog, covered above
+            idx = self.index
+            if idx.by_role["prefill"]:
+                return True
+            if idx.draining_pool:
+                return True
+        return False
+
     def dispatch(self, t):
         if self.coordinator is not None:
             # re-evaluate the prefill/decode split BEFORE placement, so a
             # replica borrowed this pass serves this pass's backlog
             self.coordinator.step(t, self)
-        self._dispatch_longs(t)
-        self._dispatch_shorts(t)
-        self._resume_paused(t)
+        # gate each sub-pass on the state it drains: most passes have work
+        # for only one of them, and a skipped call costs nothing
+        if self.long_queue:
+            self._dispatch_longs(t)
+        if self.short_queue:
+            self._dispatch_shorts(t)
+        if self._paused:
+            self._resume_paused(t)
 
     def _dispatch_longs(self, t):
+        idx = self.index
+        reps = self.replicas
+        em = self.em
         while self.long_queue:
             head = self.long_queue[0]
-            R = min(self.em.replicas_needed(head.input_len),
-                    sum(1 for r in self.replicas if r.role == "general"))
+            R = min(em.replicas_needed(head.input_len),
+                    len(idx.by_role["general"]))
+            claim_set = idx.claims.get(head.rid, ())
+            if len(claim_set) >= R:
+                # fast wait-path: the claim is complete, so most passes just
+                # poll for the claimed work draining — an order-insensitive
+                # walk of the raw set, no sorted rebuild per pass
+                for i in claim_set:
+                    if reps[i]._work is not None:
+                        return           # wait for claimed work to drain
             # Claim R replicas up-front: idle ones, then ones finishing their
             # current short work (§5: a long "only waits for the ongoing short
             # requests to complete their prefill phases"). Claimed replicas
             # admit no NEW work; the long starts once all R drain.
-            claimed = [r for r in self.replicas if r.claimed_by == head.rid]
+            claimed = [reps[i] for i in sorted(claim_set)]
             if len(claimed) < R:
-                cands = [r for r in self.replicas
-                         if r.role == "general" and r.claimed_by is None
-                         and r.long_rid is None]
-                cands.sort(key=lambda r: (r.work is not None,
-                                          r.work.end if r.work else 0.0))
+                # free_general in ascending rid, then a stable busy/end sort:
+                # identical order to the historical full-list scan + sort
+                cands = [reps[i] for i in sorted(idx.free_general)]
+                cands.sort(key=lambda r: (r._work is not None,
+                                          r._work.end if r._work else 0.0))
                 for r in cands:
                     if len(claimed) >= R:
                         break
                     r.claimed_by = head.rid
                     claimed.append(r)
-            if len(claimed) < R or any(r.work is not None for r in claimed):
+            if len(claimed) < R:
                 return                   # wait for claimed work to drain
+            for r in claimed:
+                if r._work is not None:
+                    return               # wait for claimed work to drain
             self.long_queue.popleft()
             for r in claimed:
                 r.claimed_by = None
                 r.long_rid = head.rid
                 r.long_phase = "prefill"
             sp = "fastsp" if self.fastsp else "ring"
-            d = self.em.prefill_time(head.input_len, R, sp_mode=sp)
+            d = em.prefill_time(head.input_len, R, sp_mode=sp)
             head.phase = Phase.PREFILL
             head.prefill_start = t
+            self._long_seq += 1
             st = LongState(req=head, rep_ids=[r.rid for r in claimed],
-                           sp_mode=sp)
+                           sp_mode=sp, seq=self._long_seq)
             self.longs[head.rid] = st
+            self._victims[head.rid] = st
             self._start(t, "long_prefill", [head], st.rep_ids, d, sp_mode=sp)
 
     def _dispatch_shorts(self, t):
+        idx = self.index
         while self.short_queue:
             placed = False
             # 1) idle prefill-capable replica (general or borrowed from the
-            # decode pool; not claimed, not in a long group)
-            idle = [r for r in self.replicas
-                    if r.role in PREFILL_CAPABLE and r.idle
-                    and r.claimed_by is None and r.long_rid is None]
-            if idle:
+            # decode pool; not claimed, not in a long group) — min rid is
+            # the first hit of the historical rid-order scan
+            if idx.idle_prefill:
+                rid0 = min(idx.idle_prefill)
                 batch = self._batch_shorts(self.short_queue,
                                            self.cc.max_batch_tokens)
-                self._start_short_prefill(t, batch, [idle[0].rid])
+                self._start_short_prefill(t, batch, [rid0])
                 placed = True
-            # 2) colocate with long decode (§5.2)
-            elif self.coloc:
-                cands = [r for r in self.replicas
-                         if r.long_phase == "decode"
-                         and r.coloc_tokens < self.cc.max_coloc_tokens]
-                if cands:
-                    cap = sum(self.cc.max_coloc_tokens - r.coloc_tokens
-                              for r in cands)
-                    batch = self._batch_shorts(self.short_queue, cap)
-                    self._start_short_prefill(t, batch,
-                                              [r.rid for r in cands],
-                                              colocated=True)
-                    placed = True
+            # 2) colocate with long decode (§5.2) — `coloc_room` is the
+            # index-maintained headroom set (long decode, under the coloc
+            # cap), so the saturated no-candidate pass is an O(1) check
+            elif self.coloc and idx.coloc_room:
+                cands = [self.replicas[i] for i in sorted(idx.coloc_room)]
+                cap = sum(self.cc.max_coloc_tokens - r.coloc_tokens
+                          for r in cands)
+                batch = self._batch_shorts(self.short_queue, cap)
+                self._start_short_prefill(t, batch,
+                                          [r.rid for r in cands],
+                                          colocated=True)
+                placed = True
             if not placed and self.preemption:
                 # 3) preempt a running long prefill (decode too under /CoL).
                 # §5: the long resumes as soon as the preempting short
                 # prefills complete — a later short wave must preempt AGAIN
                 # (each suspension counted, per Table 3/6 semantics). This
                 # also bounds long starvation under sustained short pressure.
-                victims = [st for st in self.longs.values()
-                           if not st.paused and (
-                               st.phase == "prefill"
-                               or (not self.coloc and st.phase == "decode"))]
-                if victims:
-                    st = max(victims, key=lambda s: len(s.rep_ids))
+                # `_victims` is the incrementally-maintained eligible set;
+                # (gang size, -seq) picks the first-placed largest gang —
+                # the same victim the historical `longs`-order scan chose.
+                if self._victims:
+                    st = max(self._victims.values(),
+                             key=lambda s: (len(s.rep_ids), -s.seq))
                     self._pause_long(t, st)
                     cap = self.cc.max_batch_tokens * len(st.rep_ids)
                     batch = self._batch_shorts(self.short_queue, cap)
@@ -681,9 +827,17 @@ class PecSchedPolicy(BasePolicy):
     def _resume_paused(self, t):
         # a paused long resumes the moment its replicas are free — new shorts
         # must go through a fresh preemption (counted) to take them back.
-        for st in self.longs.values():
-            if st.paused and all(self.replicas[r].work is None
-                                 for r in st.rep_ids):
+        if not self._paused:
+            return
+        # seq order == `longs` insertion order restricted to the paused
+        # subset, so the resume (and decision-log) order is unchanged;
+        # paused gangs are disjoint, so resuming one never blocks another
+        reps = self.replicas
+        for st in sorted(self._paused.values(), key=lambda s: s.seq):
+            for r in st.rep_ids:
+                if reps[r]._work is not None:
+                    break
+            else:
                 self._resume_long(t, st)
 
     def finalize(self, t):
@@ -746,12 +900,21 @@ class PredSJFPolicy(BasePolicy):
         self._pred: Dict[int, float] = {}       # rid -> predicted output
         self._ready: List[tuple] = []           # heap of (cost, rid)
         self._decode_ready: List[tuple] = []    # heap of (cost, rid)
-        self._dstate: Dict[int, Dict] = {}      # rid -> decode-lane state
+        #: rid -> [tokens_done, round_budget, rounds] decode-lane state
+        #: (a plain list: the lane hooks touch it per decode round)
+        self._dstate: Dict[int, List] = {}
         self._n_general = sum(1 for r in self.replicas
                               if r.role in PREFILL_CAPABLE) or 1
         self._decode_pool = ([r for r in self.replicas
                               if r.role == "short_decode"]
                              or list(self.replicas))
+        self._batch_eff = max(1, self.cc.decode_batch_eff)
+        #: free decode-lane slots across the pool; kept exact by the round
+        #: start/finish hooks so the dispatch gate is O(1).  _lane_free > 0
+        #: iff some pool replica has decode_load < max_decode_concurrency —
+        #: exactly _dispatch_decode's placement condition.
+        self._lane_free = len(self._decode_pool) \
+            * self.cc.max_decode_concurrency
 
     # ---- predicted cost (the decision side) ---------------------------
     def _lane_decode_time(self, output_len: float, context_len: int) -> float:
@@ -759,8 +922,7 @@ class PredSJFPolicy(BasePolicy):
         its own completion time, but iterations share the replica with the
         other lanes — price at the model's effective batch width so lane
         throughput matches what batched decode pricing would grant."""
-        return self.em.decode_time(output_len, context_len,
-                                   batch=max(1, self.cc.decode_batch_eff))
+        return self.em.decode_time(output_len, context_len, self._batch_eff)
 
     def _total_cost(self, req: Request, pred_out: float) -> float:
         if req.is_long:
@@ -773,12 +935,18 @@ class PredSJFPolicy(BasePolicy):
 
     def _push_decode(self, req: Request) -> None:
         st = self._dstate[req.rid]
-        cost = self._lane_decode_time(st["budget"], req.input_len + st["done"])
+        cost = self._lane_decode_time(st[1], req.input_len + st[0])
         heapq.heappush(self._decode_ready, (cost, req.rid))
+
+    def _forget(self, rid: int) -> None:
+        """Drop the per-request lookup state of a completed request — keeps
+        the policy's own dicts flat over million-request replays."""
+        self._reqs.pop(rid, None)
+        self._pred.pop(rid, None)
 
     # ---- event hooks --------------------------------------------------
     def on_arrival(self, t, req):
-        self.all_requests.append(req)
+        self._record_arrival(req)
         self._reqs[req.rid] = req
         # ordering always uses the point estimate (so `tail_aware` makes the
         # same queueing decisions as `sjf_pred`); the quantile hedges only
@@ -797,64 +965,69 @@ class PredSJFPolicy(BasePolicy):
             for r in work.requests:
                 r.phase = Phase.DONE
                 r.finish = t
-                self.done_requests.append(r)
+                self._complete_request(r)
                 self.predictor.observe(r, r.output_len)
+                self._forget(r.rid)
             return
         # short_prefill: first token is out; hand off to a decode lane with
         # the predicted remaining budget (everything after the prefill token)
         for r in work.requests:
             r.first_token = t
             r.phase = Phase.MIGRATING
-            self._dstate[r.rid] = {
-                "done": 1,
-                "budget": max(1, int(round(self._pred[r.rid])) - 1),
-                "rounds": 0,
-            }
+            self._dstate[r.rid] = [
+                1,                                          # tokens done
+                max(1, int(round(self._pred[r.rid])) - 1),  # round budget
+                0,                                          # rounds run
+            ]
             self._push_decode(r)
 
     # ---- decode lanes -------------------------------------------------
     def _start_decode_round(self, t, req: Request, rep: ReplicaState):
         st = self._dstate[req.rid]
-        ctx = req.input_len + st["done"]
+        done, budget = st[0], st[1]
+        ctx = req.input_len + done
         # execution side: the lane stops at EOS if truth runs out before the
         # scheduled budget — the analytic clock prices exactly the tokens
         # that actually run, mirroring what real engines would do
-        run = min(st["budget"], max(req.output_len - st["done"], 0))
+        run = min(budget, max(req.output_len - done, 0))
         d = self._lane_decode_time(run, ctx)
-        if st["rounds"] > 0:
+        if st[2] > 0:
             # re-admission after an eviction: park + restore of the
             # accumulated KV, priced as two migrations over the interconnect
             d += 2.0 * self.em.migration_time(ctx)
             if self.record_decisions:
                 self.decision_log.append(("pred_readmit", req.rid, t))
         rep.decode_load += 1
+        self._lane_free -= 1
         req.phase = Phase.DECODE
         w = Work(wid=next(self._wid), kind="pred_decode",
                  replica_ids=[rep.rid], requests=[req], start=t, duration=d,
-                 token_budget=st["budget"])
+                 token_budget=budget)
         self._emit(w)
 
     def _decode_round_done(self, t, work: Work):
         req = work.requests[0]
         rep = self.replicas[work.replica_ids[0]]
-        rep.decode_load = max(0, rep.decode_load - 1)
+        rep.decode_load = max(0, rep._decode_load - 1)
+        self._lane_free += 1
         rep.add_busy(work.duration)
         st = self._dstate[req.rid]
-        if st["done"] + st["budget"] >= req.output_len:
+        if st[0] + st[1] >= req.output_len:
             # EOS fired inside this round — the one place the true length
             # becomes observable; feed it back to online predictors
             req.phase = Phase.DONE
             req.finish = t
-            self.done_requests.append(req)
+            self._complete_request(req)
             self.predictor.observe(req, req.output_len)
             del self._dstate[req.rid]
+            self._forget(req.rid)
             return
         # budget exhausted first: the prediction was short.  Decode-lane
         # preemption — evict at this step boundary, escalate, re-queue.
-        st["done"] += st["budget"]
-        st["rounds"] += 1
-        st["budget"] = max(st["budget"] + 1,
-                           int(st["budget"] * self.ESCALATION))
+        budget = st[1]
+        st[0] += budget
+        st[2] += 1
+        st[1] = max(budget + 1, int(budget * self.ESCALATION))
         self.decode_preemption_events += 1
         req.n_preemptions += 1
         if self.record_decisions:
@@ -862,63 +1035,86 @@ class PredSJFPolicy(BasePolicy):
         self._push_decode(req)
 
     # ---- dispatch -----------------------------------------------------
+    def needs_dispatch(self, t):
+        # mirror of dispatch's two sub-pass gates: a pass with no idle
+        # prefill replica and no free decode-lane slot provably places
+        # nothing (see _dispatch_prefill / _dispatch_decode early-outs), so
+        # under saturation most event batches skip the pass entirely
+        return bool((self._ready and self.index.idle_prefill)
+                    or (self._decode_ready and self._lane_free))
+
     def dispatch(self, t):
-        self._dispatch_prefill(t)
-        self._dispatch_decode(t)
+        # inline the sub-pass guards: under saturation most passes can act
+        # on only one (or neither) of the two ready heaps
+        if self._ready and self.index.idle_prefill:
+            self._dispatch_prefill(t)
+        if self._decode_ready and self._lane_free:
+            self._dispatch_decode(t)
 
     def _dispatch_prefill(self, t):
+        avail = self.index.idle_prefill     # live view, index-maintained
+        ready = self._ready
+        if not avail or not ready:
+            return
         holdback = []
-        while self._ready:
-            idle = [r for r in self.replicas
-                    if r.role in PREFILL_CAPABLE and r.idle
-                    and r.claimed_by is None]
-            if not idle:
+        reqs, em = self._reqs, self.em
+        max_tok = self.cc.max_batch_tokens
+        heappop = heapq.heappop
+        while ready:
+            if not avail:
                 break
-            cost, rid = heapq.heappop(self._ready)
-            req = self._reqs[rid]
+            cost, rid = heappop(ready)
+            req = reqs[rid]
             if req.is_long:
-                R = max(1, min(self.em.replicas_needed(req.input_len),
+                R = max(1, min(em.replicas_needed(req.input_len),
                                self._n_general))
-                if len(idle) < R:
+                if len(avail) < R:
                     # not enough replicas for the gang *now*: skip the long
                     # without blocking cheaper work behind it (no HOL)
                     holdback.append((cost, rid))
                     continue
-                idle.sort(key=lambda r: r.node)
-                d = (self.em.prefill_time(req.input_len, R, sp_mode="ring")
-                     + self.em.decode_time(req.output_len, req.input_len,
-                                           batch=1))
+                # ascending rid == the historical rid scan + stable node sort
+                rep_ids = sorted(avail)[:R]
+                d = (em.prefill_time(req.input_len, R, sp_mode="ring")
+                     + em.decode_time(req.output_len, req.input_len,
+                                      batch=1))
                 req.phase = Phase.PREFILL
                 req.prefill_start = t
-                self._start(t, "long_full", [req],
-                            [r.rid for r in idle[:R]], d, sp_mode="ring")
+                self._start(t, "long_full", [req], rep_ids, d, sp_mode="ring")
                 continue
             # shorts: pull the next-cheapest shorts into one prefill batch
             batch, tok = [req], req.input_len
-            while self._ready and tok < self.cc.max_batch_tokens:
-                nxt = self._reqs[self._ready[0][1]]
-                if nxt.is_long or tok + nxt.input_len > self.cc.max_batch_tokens:
+            while ready and tok < max_tok:
+                nxt = reqs[ready[0][1]]
+                if nxt.is_long or tok + nxt.input_len > max_tok:
                     break
-                heapq.heappop(self._ready)
+                heappop(ready)
                 batch.append(nxt)
                 tok += nxt.input_len
             for r in batch:
                 r.phase = Phase.PREFILL
                 r.prefill_start = t
-            d = self.em.prefill_time(tok, 1, sp_mode="local")
-            self._start(t, "short_prefill", batch, [idle[0].rid], d)
+            d = em.prefill_time(tok, 1, sp_mode="local")
+            rid0 = min(avail)
+            self._start(t, "short_prefill", batch, [rid0], d)
         for item in holdback:
-            heapq.heappush(self._ready, item)
+            heapq.heappush(ready, item)
 
     def _dispatch_decode(self, t):
+        cap = self.cc.max_decode_concurrency
         while self._decode_ready:
-            lanes = [r for r in self._decode_pool
-                     if r.decode_load < self.cc.max_decode_concurrency]
-            if not lanes:
+            # least-loaded lane with headroom, rid tie-break — the same
+            # replica the historical filter + (load, rid) sort selected
+            rep = best = None
+            for r in self._decode_pool:
+                load = r._decode_load
+                if load < cap and (best is None or (load, r.rid) < best):
+                    best = (load, r.rid)
+                    rep = r
+            if rep is None:
                 return
-            lanes.sort(key=lambda r: (r.decode_load, r.rid))
             _, rid = heapq.heappop(self._decode_ready)
-            self._start_decode_round(t, self._reqs[rid], lanes[0])
+            self._start_decode_round(t, self._reqs[rid], rep)
 
     def finalize(self, t):
         for _, rid in self._ready:

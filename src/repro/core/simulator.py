@@ -101,12 +101,22 @@ class EventHeap:
         self.n_canceled += 1
         return True
 
-    def pop_batch(self) -> Optional[Tuple[float, List[Entry]]]:
-        """Pop ALL events at the earliest live timestamp."""
+    def pop_batch(self, limit: Optional[float] = None
+                  ) -> Optional[Tuple[float, List[Entry]]]:
+        """Pop ALL events at the earliest live timestamp.  With `limit`,
+        pop only if that timestamp is <= limit — otherwise return None and
+        leave the heap untouched (the lazy-arrival loop peeks this way to
+        interleave trace arrivals without materializing them as entries)."""
         while self._times:
+            if limit is not None and self._times[0] > limit:
+                return None
             t = heapq.heappop(self._times)
             slot = self._slots.pop(t)
-            live = [e for e in slot if e[1] is not None]
+            live = slot                 # common case: no canceled entries,
+            for e in slot:              # hand back the slot list itself
+                if e[1] is None:
+                    live = [x for x in slot if x[1] is not None]
+                    break
             if live:
                 for e in live:
                     e[2] = True
@@ -129,7 +139,7 @@ class EventHeap:
         self.n_live += len(entries)
 
 
-@dataclass
+@dataclass(slots=True)
 class Work:
     wid: int
     kind: str                   # short_prefill|short_decode|short_full|
@@ -167,7 +177,8 @@ class Simulator:
     ``backend.on_event``.
     """
 
-    def __init__(self, policy: "BasePolicy", backend=None):
+    def __init__(self, policy: "BasePolicy", backend=None, *,
+                 elide_dispatch: bool = True):
         from repro.core.backend import SimBackend
         self.policy = policy
         self.backend = backend if backend is not None else SimBackend()
@@ -176,9 +187,20 @@ class Simulator:
         self.now = 0.0
         self.sched_time = 0.0           # wall-clock spent in policy decisions
         self.run_time = 0.0             # wall-clock of the whole run()
-        self.n_dispatches = 0           # dispatch passes (== event batches)
+        self.n_dispatches = 0           # dispatch passes actually run
         self.n_events = 0               # events applied (arrivals + dones)
         self.last_arrival = 0.0
+        #: dirty-dispatch elision: skip the dispatch pass after a batch that
+        #: changed nothing a policy could act on.  False = the brute-force
+        #: reference driver (dispatch after EVERY batch) the decision-log
+        #: property suite compares against.
+        self.elide_dispatch = elide_dispatch
+        self.n_elided_quantum = 0       # skipped: pure backend-quantum batch
+        self.n_elided_idle = 0          # skipped: policy.needs_dispatch False
+        #: arrivals applied straight off the lazy stream (never heap
+        #: entries); counted as logical pushes so the accounting identity
+        #: events + cancels == pushes holds either way arrivals are fed
+        self.n_stream_arrivals = 0
 
     # ------------------------------------------------------------------
     def push(self, t: float, kind: str, payload) -> Entry:
@@ -197,41 +219,84 @@ class Simulator:
         return self.heap.cancel(entry) if entry is not None else False
 
     # ------------------------------------------------------------------
-    def run(self, requests: List[Request], *, horizon: Optional[float] = None
-            ) -> Dict:
+    def run(self, requests: "Iterable[Request]", *,
+            horizon: Optional[float] = None) -> Dict:
         """Replay `requests` to completion (or to `horizon`).
 
+        Arrivals are fed LAZILY: instead of materializing every request as
+        a heap entry up front (1M entries for a 1M-request trace), the loop
+        walks an arrival-sorted stream next to the heap and merges the two
+        — at equal timestamps arrivals apply first, exactly the slot order
+        the old bulk `heap.load` produced.  A list input is sorted here
+        (stable, so same-time order is preserved); any other iterable must
+        already be arrival-sorted — generators make the replay memory-flat,
+        since a completed request with no retaining policy list is
+        garbage-collected immediately.
+
         Horizon semantics: the first event batch strictly past `horizon` is
-        pushed back into the heap unprocessed (`EventHeap.unpop`), so a
-        truncated replay does NOT silently drop in-flight completions — they
-        stay pending in `self.heap` for inspection, and `self.now` stops at
-        the last applied timestamp <= horizon.
+        pushed back into the heap unprocessed (`EventHeap.unpop`, with the
+        unconsumed arrivals bulk-loaded alongside it), so a truncated
+        replay does NOT silently drop in-flight completions — they stay
+        pending in `self.heap` for inspection, and `self.now` stops at the
+        last applied timestamp <= horizon.
         """
         wall0 = _time.perf_counter()
-        self.last_arrival = max(r.arrival for r in requests) if requests else 0.0
-        self.heap.load((r.arrival, "ARRIVAL", r) for r in requests)
+        if isinstance(requests, (list, tuple)):
+            requests = sorted(requests, key=lambda r: r.arrival)
+            self.last_arrival = requests[-1].arrival if requests else 0.0
         self.backend.bind(self)
         self.policy.bind(self.backend)
         on_arrival, on_done = self.policy.on_arrival, self.policy.on_done
         dispatch = self.policy.dispatch
+        needs_dispatch = self.policy.needs_dispatch
+        elide = self.elide_dispatch
         backend_event = self.backend.on_event
         finish = self.backend.finish if self.backend.needs_finish else None
+        arr_iter = iter(requests)
+        next_req = next(arr_iter, None)
+        arrivals: List[Request] = []
         while True:
-            batch = self.heap.pop_batch()
+            t_arr = next_req.arrival if next_req is not None else None
+            batch = self.heap.pop_batch(limit=t_arr)
             if batch is None:
-                break
-            t, entries = batch
+                if next_req is None:
+                    break                   # heap drained, trace consumed
+                t, entries = t_arr, ()
+            else:
+                t, entries = batch
+            del arrivals[:]
+            while next_req is not None and next_req.arrival <= t:
+                if next_req.arrival < t:
+                    raise ValueError(
+                        "run() requires arrival-sorted requests (got "
+                        f"arrival {next_req.arrival} after time {t})")
+                arrivals.append(next_req)
+                next_req = next(arr_iter, None)
             if horizon is not None and t > horizon:
-                self.heap.unpop(t, entries)
+                if entries:
+                    self.heap.unpop(t, entries)
+                rest = [(r.arrival, "ARRIVAL", r) for r in arrivals]
+                rest.extend((r.arrival, "ARRIVAL", r) for r in arr_iter)
+                if next_req is not None:
+                    rest.append((next_req.arrival, "ARRIVAL", next_req))
+                self.heap.load(rest)
                 break
             self.now = t
+            if arrivals and t > self.last_arrival:
+                self.last_arrival = t       # generator input: track inline
             t0 = _time.perf_counter()
+            n_policy_events = len(arrivals)
+            self.n_stream_arrivals += n_policy_events
+            self.n_events += n_policy_events
+            for r in arrivals:
+                on_arrival(t, r)
             for entry in entries:
                 kind, payload = entry[0], entry[1]
                 if payload is None:         # canceled mid-batch (legacy path)
                     continue
-                if kind == "ARRIVAL":
+                if kind == "ARRIVAL":       # reinstated post-horizon entries
                     on_arrival(t, payload)
+                    n_policy_events += 1
                 elif kind == "DONE":
                     self._work_entries.pop(payload.wid, None)
                     if payload.canceled:    # legacy flag-only cancellation
@@ -239,15 +304,24 @@ class Simulator:
                     if finish is not None:
                         finish(t, payload)
                     on_done(t, payload)
+                    n_policy_events += 1
                 else:                       # backend-internal (engine quantum)
                     self._work_entries.pop(payload.wid, None)
                     if payload.canceled:
                         continue
                     backend_event(t, kind, payload)
                 self.n_events += 1
-            dispatch(t)
+            # dirty-dispatch elision: a pure backend-quantum batch moved no
+            # policy-visible state; an event batch that left every queue
+            # empty (needs_dispatch False) provably has nothing to place
+            if elide and n_policy_events == 0:
+                self.n_elided_quantum += 1
+            elif elide and not needs_dispatch(t):
+                self.n_elided_idle += 1
+            else:
+                dispatch(t)
+                self.n_dispatches += 1
             self.sched_time += _time.perf_counter() - t0
-            self.n_dispatches += 1
         self.policy.finalize(self.now)
         self.run_time = _time.perf_counter() - wall0
         return self.policy.summary(self.now)
@@ -255,13 +329,22 @@ class Simulator:
     # ------------------------------------------------------------------
     def profile(self) -> Dict:
         """Event-loop counter report (cheap ints, always collected)."""
+        index = getattr(self.policy, "index", None)
         return {
             "events": self.n_events,
-            "pushes": self.heap.n_pushed,
+            "pushes": self.heap.n_pushed + self.n_stream_arrivals,
             "cancels": self.heap.n_canceled,
             "dispatch_passes": self.n_dispatches,
+            # dirty-dispatch elision: batches whose dispatch pass was skipped
+            # because nothing policy-visible changed (pure backend quanta) or
+            # the policy proved itself idle (needs_dispatch False)
+            "dispatch_elided_quantum": self.n_elided_quantum,
+            "dispatch_elided_idle": self.n_elided_idle,
             "events_per_dispatch": self.n_events / max(self.n_dispatches, 1),
             "peak_heap_slots": self.heap.peak_slots,
+            # cluster-index effectiveness: set-backed lookups vs O(R) rescans
+            "index_queries": getattr(index, "n_queries", 0),
+            "index_rescans": getattr(index, "n_rescans", 0),
             "wall_s": self.run_time,
             "policy_s": self.sched_time,
             "loop_s": self.run_time - self.sched_time,
@@ -272,7 +355,11 @@ class Simulator:
 def format_profile(p: Dict) -> str:
     return ("events={events} pushes={pushes} cancels={cancels} "
             "dispatch_passes={dispatch_passes} "
+            "elided(quantum/idle)={dispatch_elided_quantum}/"
+            "{dispatch_elided_idle} "
             "events/dispatch={events_per_dispatch:.2f} "
-            "peak_heap_slots={peak_heap_slots} wall={wall_s:.2f}s "
+            "peak_heap_slots={peak_heap_slots} "
+            "index(queries/rescans)={index_queries}/{index_rescans} "
+            "wall={wall_s:.2f}s "
             "(policy {policy_s:.2f}s / loop {loop_s:.2f}s) "
             "events/sec={events_per_sec:,.0f}".format(**p))

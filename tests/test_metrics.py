@@ -9,8 +9,8 @@ import pytest
 
 from repro.core import (ClusterConfig, ExecutionModel, Simulator,
                         get_scenario, make_policy)
-from repro.core.metrics import (PCTS, _idle_rate, _short_rps, aggregate_seeds,
-                                ci95, pct, summarize)
+from repro.core.metrics import (AGGREGATE_KEYS, PCTS, _idle_rate, _short_rps,
+                                aggregate_seeds, ci95, pct, summarize)
 from repro.core.request import Phase, Request
 from repro.configs import get_config, reduced_config
 
@@ -131,3 +131,24 @@ def test_aggregate_seeds(small_cluster):
     assert agg["short_qd_pct"]["99"]["n"] == 2
     # the aggregate itself stays JSON-stable
     assert json.loads(json.dumps(agg)) == agg
+
+
+def test_aggregate_seeds_carries_preemption_and_flip_counters(small_cluster):
+    """`decode_preemptions` (decode-lane evictions) and `role_flips`
+    (coordinator transitions) are first-class AGGREGATE_KEYS: a seed sweep
+    must fold both counters into cross-seed CI bands, not drop them."""
+    assert "decode_preemptions" in AGGREGATE_KEYS
+    assert "role_flips" in AGGREGATE_KEYS
+    cc, em = small_cluster
+    summaries = []
+    for seed in (0, 1):
+        reqs = get_scenario("smoke_mini", n_requests=21, seed=seed)
+        pol = make_policy("pecsched/coord", cc, em)
+        summaries.append(Simulator(pol).run(copy.deepcopy(reqs)))
+    assert all("decode_preemptions" in s and "role_flips" in s
+               for s in summaries)
+    agg = aggregate_seeds(summaries)
+    for key in ("decode_preemptions", "role_flips"):
+        assert agg[key]["n"] == 2
+        assert agg[key]["mean"] is not None
+        assert agg[key]["mean"] >= 0.0

@@ -1,0 +1,233 @@
+"""Property suite for the PR-7 hot-path optimizations (scale without drift).
+
+The optimizations under test must be *invisible* to scheduling:
+
+  * dirty-dispatch elision (`Simulator(elide_dispatch=True)`, the default)
+    skips the dispatch pass for pure backend-quantum batches and for
+    idle policies — the reference driver (`elide_dispatch=False`) runs
+    dispatch after every batch like the pre-optimization simulator did;
+  * `ClusterIndex` replaces the per-dispatch replica-list scans with
+    incrementally maintained rid sets — `index.audit()` recomputes every
+    set brute-force and asserts equality;
+  * streaming metrics (`enable_streaming_metrics()`) fold per-request
+    stats into numpy buffers at completion — counts and percentiles must
+    match the retained-lists summary exactly, float means to ~ulps.
+
+Each property runs every policy in POLICY_NAMES over randomized small
+traces.  Deterministic seeded sweeps always run; when hypothesis is
+available an extra fuzzing pass widens the trace space.
+"""
+from __future__ import annotations
+
+import copy
+import math
+import random
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (ClusterConfig, ExecutionModel, Request, Simulator,
+                        get_scenario)
+from repro.core.metrics import summarize
+from repro.core.schedulers import POLICY_NAMES, make_policy
+
+SCENARIOS = ("azure_default", "bursty")
+
+
+def small_cluster(n_replicas: int = 6, n_decode: int = 2):
+    cc = ClusterConfig(n_nodes=1, gpus_per_node=n_replicas, tp=1,
+                       gpu_mem_bytes=20e9,
+                       n_short_decode_replicas=n_decode)
+    em = ExecutionModel(get_config("mistral_7b"), cc.replica_spec())
+    return cc, em
+
+
+def random_trace(rng: random.Random, n: int) -> list:
+    """A direct randomized trace (not a named scenario): adversarial
+    arrival clumping, zero-gap ties, and a random long fraction."""
+    reqs, t = [], 0.0
+    for rid in range(n):
+        if rng.random() < 0.25:
+            t += 0.0                       # deliberate same-timestamp tie
+        else:
+            t += rng.expovariate(rng.choice((2.0, 8.0, 30.0)))
+        is_long = rng.random() < 0.08
+        input_len = rng.randint(60_000, 200_000) if is_long \
+            else rng.randint(32, 4096)
+        output_len = rng.randint(1, 48) if is_long else rng.randint(1, 256)
+        reqs.append(Request(rid=rid, arrival=t, input_len=input_len,
+                            output_len=output_len, is_long=is_long,
+                            tenant=rng.choice((None, "a", "b"))))
+    return reqs
+
+
+def run_once(policy_name, cc, em, reqs, *, elide, streaming=False,
+             horizon=None):
+    pol = make_policy(policy_name, cc, em)
+    pol.record_decisions = True
+    if streaming:
+        pol.enable_streaming_metrics()
+    sim = Simulator(pol, elide_dispatch=elide)
+    sim.run(copy.deepcopy(reqs), horizon=horizon)
+    return pol, sim
+
+
+def completion_sets(pol):
+    if pol.metrics_acc is not None:
+        raise AssertionError("completion_sets needs retained mode")
+    return {(r.rid, r.finish, r.first_token, r.n_preemptions,
+             tuple(r.replicas)) for r in pol.done_requests}
+
+
+def summary_t_end(pol):
+    finished = [r.finish for r in pol.done_requests if r.finish is not None]
+    return (max(finished) if finished else 0.0) + 1.0
+
+
+def assert_no_drift(policy_name, cc, em, reqs, horizon=None):
+    """Optimized (elided) vs reference (dispatch-every-batch) drivers must
+    agree on every decision, every completion, and the whole summary."""
+    pol_opt, sim_opt = run_once(policy_name, cc, em, reqs, elide=True,
+                                horizon=horizon)
+    pol_ref, sim_ref = run_once(policy_name, cc, em, reqs, elide=False,
+                                horizon=horizon)
+    assert pol_opt.decision_log == pol_ref.decision_log, \
+        f"{policy_name}: decision drift under dispatch elision"
+    assert completion_sets(pol_opt) == completion_sets(pol_ref)
+    t_end = summary_t_end(pol_ref)
+    assert summarize(pol_opt, t_end) == summarize(pol_ref, t_end)
+    pol_opt.index.audit()
+    pol_ref.index.audit()
+    # the optimization must actually elide something on non-trivial traces
+    prof = sim_opt.profile()
+    assert prof["dispatch_elided_quantum"] + prof["dispatch_elided_idle"] \
+        + prof["dispatch_passes"] > 0
+    return pol_opt
+
+
+# ---------------------------------------------------------------------------
+# deterministic seeded sweeps (always run; hypothesis is optional below)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy_name", POLICY_NAMES)
+def test_elision_no_drift_scenarios(policy_name):
+    cc, em = small_cluster()
+    for scenario in SCENARIOS:
+        reqs = get_scenario(scenario, n_requests=140,
+                            seed=hash((policy_name, scenario)) % 1000)
+        assert_no_drift(policy_name, cc, em, reqs)
+
+
+@pytest.mark.parametrize("policy_name", POLICY_NAMES)
+def test_elision_no_drift_random_traces(policy_name):
+    for trial in range(3):
+        rng = random.Random((policy_name, trial).__hash__())
+        cc, em = small_cluster(n_replicas=rng.choice((3, 5, 8)),
+                               n_decode=rng.choice((1, 2, 3)))
+        reqs = random_trace(rng, rng.randint(40, 160))
+        assert_no_drift(policy_name, cc, em, reqs)
+
+
+@pytest.mark.parametrize("policy_name", POLICY_NAMES)
+def test_elision_no_drift_under_horizon(policy_name):
+    """Cutting the run mid-trace (horizon) must not desynchronize the
+    lazy arrival feed or the index."""
+    cc, em = small_cluster()
+    reqs = get_scenario("bursty", n_requests=120, seed=11)
+    span = max(r.arrival for r in reqs)
+    assert_no_drift(policy_name, cc, em, reqs, horizon=span * 0.6)
+
+
+@pytest.mark.parametrize("policy_name", POLICY_NAMES)
+def test_index_audit_mid_run(policy_name):
+    """The incremental index matches a brute-force recompute at every
+    batch boundary, not just at the end."""
+    cc, em = small_cluster()
+    pol = make_policy(policy_name, cc, em)
+    sim = Simulator(pol)
+    reqs = sorted(get_scenario("azure_default", n_requests=80, seed=3),
+                  key=lambda r: r.arrival)
+    audits = 0
+    # replay in slices so the index is audited with work in flight
+    for frac in (0.25, 0.5, 0.75, 1.0, None):
+        horizon = None if frac is None else max(r.arrival for r in reqs) * frac
+        pol2 = make_policy(policy_name, cc, em)
+        Simulator(pol2).run(copy.deepcopy(reqs), horizon=horizon)
+        pol2.index.audit()
+        audits += 1
+    assert audits == 5
+    del sim
+
+
+@pytest.mark.parametrize("policy_name", POLICY_NAMES)
+def test_streaming_matches_retained(policy_name):
+    cc, em = small_cluster()
+    reqs = get_scenario("azure_default", n_requests=160, seed=5)
+    pol_ret, _ = run_once(policy_name, cc, em, reqs, elide=True)
+    pol_str, _ = run_once(policy_name, cc, em, reqs, elide=True,
+                          streaming=True)
+    assert pol_str.decision_log == pol_ret.decision_log
+    assert not pol_str.all_requests and not pol_str.done_requests
+    t_end = summary_t_end(pol_ret)
+    s_ret, s_str = summarize(pol_ret, t_end), summarize(pol_str, t_end)
+    assert set(s_ret) == set(s_str)
+    for key, want in s_ret.items():
+        got = s_str[key]
+        if key == "per_tenant":
+            assert (got is None) == (want is None)
+            if want is not None:
+                assert set(got) == set(want)
+                for ten, wt in want.items():
+                    for k2, v2 in wt.items():
+                        _assert_stat(f"per_tenant[{ten}].{k2}",
+                                     got[ten][k2], v2)
+            continue
+        _assert_stat(key, got, want)
+
+
+def _assert_stat(key, got, want):
+    if isinstance(want, dict):            # percentile dicts: exact
+        assert got == want, f"{key}: {got} != {want}"
+    elif isinstance(want, float) and not math.isnan(want):
+        # order-sensitive float means may differ in the last ulps between
+        # completion-order (streaming) and arrival-order (retained) sums
+        assert got == pytest.approx(want, rel=1e-9, abs=1e-12), \
+            f"{key}: {got} != {want}"
+    else:                                  # counts, rates, None, ints
+        assert got == want, f"{key}: {got} != {want}"
+
+
+def test_streaming_is_memory_flat():
+    """Streaming mode must not retain Request objects: the accumulator's
+    pending dict is bounded by in-flight work, not by trace length."""
+    cc, em = small_cluster()
+    reqs = get_scenario("azure_default", n_requests=400, seed=9)
+    pol, _ = run_once("pecsched", cc, em, reqs, elide=True, streaming=True)
+    acc = pol.metrics_acc
+    assert acc.n_short + acc.n_long == len(reqs)
+    assert not acc.pending              # everything completed and folded
+    assert not pol.all_requests and not pol.done_requests
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzzing (optional: widens the trace space when available)
+# ---------------------------------------------------------------------------
+def test_elision_no_drift_hypothesis():
+    pytest.importorskip(
+        "hypothesis",
+        reason="hypothesis unavailable: seeded sweeps above still cover")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 2**32 - 1),
+           n=st.integers(20, 120),
+           policy_name=st.sampled_from(POLICY_NAMES))
+    def inner(seed, n, policy_name):
+        rng = random.Random(seed)
+        cc, em = small_cluster(n_replicas=rng.choice((3, 6, 9)),
+                               n_decode=rng.choice((1, 2)))
+        reqs = random_trace(rng, n)
+        assert_no_drift(policy_name, cc, em, reqs)
+
+    inner()
