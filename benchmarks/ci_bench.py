@@ -66,6 +66,11 @@ SIM_CASES = (
     # (+ misprediction evictions) make this the event-loop-heaviest policy;
     # gated so the lane machinery staying O(log n) is a checked invariant
     ("sjf_pred_bursty_10k", "sjf_pred", "bursty", 10_000),
+    # prefix-cache routing on multi-turn chat: every dispatch adds residency
+    # lookups/records and per-request prefill discounts on top of the base
+    # PecSched path — gated so the cache machinery stays O(1) per decision
+    ("pecsched_cache_multiturn_10k", "pecsched/cache", "chat_multiturn",
+     10_000),
 )
 
 #: reduced scale_sweep case: generated trace + streaming metrics on a

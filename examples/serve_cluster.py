@@ -177,6 +177,15 @@ def main() -> None:
               f"{ms(s['long_jct_mean']):8.1f}m "
               f"{s['preemptions']:7d} {s['long_starved_frac']:7.2f} "
               f"{backend.measured_s:7.2f}s {wall:5.1f}s{gang_note}")
+        ps = getattr(pol, "prefix_stats", None)
+        if ps and ps["lookups"]:
+            ks = backend.prefix_cache_stats()
+            print(f"  prefix-cache: routed {ps['lookups']} lookups, "
+                  f"{ps['hits']} hits ({ps['hits'] / ps['lookups']:.0%}), "
+                  f"{ps['hit_tokens']:,} tokens | engine pools: "
+                  f"{ks.get('lookups', 0)} lookups, {ks.get('hits', 0)} "
+                  f"hits, {ks.get('blocks_shared', 0)} blocks shared, "
+                  f"{ks.get('cow_forks', 0)} COW forks")
         if pol.role_log:
             shown = ", ".join(f"t={t*1e3:.2f}ms r{rid} {old}->{new}"
                               for t, rid, old, new in pol.role_log[:6])

@@ -3,9 +3,9 @@ headline comparison (Figs. 9-11) for one model.
 
 By default this replays the paper's calibrated §6.2 experiment trace; any
 named scenario from the registry (azure_default, bursty, diurnal,
-heavy_tail, multi_tenant, chat_multiturn, pred_stress) or a real
-Azure-trace-format CSV can be swept across the same policy matrix, over
-any `make_policy` names via --policies:
+heavy_tail, multi_tenant, chat_multiturn, shared_prefix, pred_stress) or a
+real Azure-trace-format CSV can be swept across the same policy matrix,
+over any `make_policy` names via --policies:
 
     PYTHONPATH=src python examples/trace_replay.py [--model mistral_7b]
     PYTHONPATH=src python examples/trace_replay.py --scenario bursty
@@ -21,7 +21,8 @@ from repro.core import (Simulator, experiment_trace, format_profile,
 from repro.core.workload import PAPER_SETUPS, calibrate_short_capacity
 
 POLICIES = ("fifo", "reservation", "priority", "pecsched",
-            "pecsched/pe", "pecsched/fsp", "sjf_pred", "tail_aware")
+            "pecsched/pe", "pecsched/fsp", "pecsched/cache", "sjf_pred",
+            "tail_aware")
 
 
 def build_requests(args, cc, em):
@@ -85,7 +86,8 @@ def main() -> None:
           f"{'longJCT':>8s} {'starved':>8s} {'preempt':>8s}")
     pols = args.policies.split(",") if args.policies else POLICIES
     for pol in pols:
-        sim = Simulator(make_policy(pol, cc, em))
+        policy = make_policy(pol, cc, em)
+        sim = Simulator(policy)
         s = sim.run(copy.deepcopy(reqs))
         print(f"{pol:14s} {s['short_qd_pct']['50']:8.3f} "
               f"{s['short_qd_pct']['99']:9.2f} {s['short_rps']:6.1f} "
@@ -93,6 +95,13 @@ def main() -> None:
               f"{s['long_starved_frac']:8.2f} {s['preemptions']:8d}")
         if args.profile:
             print(f"  {format_profile(sim.profile())}")
+            ps = getattr(policy, "prefix_stats", None)
+            if ps and ps["lookups"]:
+                print(f"  prefix-cache: {ps['lookups']} lookups, "
+                      f"{ps['hits']} hits "
+                      f"({ps['hits'] / ps['lookups']:.1%}), "
+                      f"{ps['hit_tokens']:,} tokens reused, "
+                      f"{ps['flops_saved']:.3g} prefill FLOPs saved")
     print("\npaper claims: PecSched ~= Priority for shorts, 58-92% p99 cut "
           "vs FIFO/Reservation, longs never starved, modest JCT cost.")
 

@@ -11,9 +11,10 @@ from repro.core.predictor import (PREDICTOR_NAMES, AdversarialPredictor,
 from repro.core.request import Phase, Request
 from repro.core.scenarios import SCENARIOS, get_scenario, list_scenarios
 from repro.core.schedulers import (POLICY_NAMES, BasePolicy, FIFOPolicy,
-                                   PecSchedPolicy, PredSJFPolicy,
-                                   PriorityPolicy, ReservationPolicy,
-                                   TailAwarePolicy, make_policy)
+                                   PecSchedCachePolicy, PecSchedPolicy,
+                                   PredSJFPolicy, PriorityPolicy,
+                                   ReservationPolicy, TailAwarePolicy,
+                                   make_policy)
 from repro.core.simulator import EventHeap, Simulator, Work, format_profile
 from repro.core.trace import (TraceConfig, generate_trace, load_trace_csv,
                               save_trace_csv, trace_stats)

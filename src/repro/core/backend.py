@@ -87,6 +87,14 @@ class ExecutionBackend:
     def reset(self) -> None:
         """Clear per-run state so the backend can drive a fresh policy."""
 
+    def prefix_cache_stats(self) -> dict:
+        """Prefix-cache counters of the execution substrate (block-hash
+        lookups, hits, blocks shared, copy-on-write forks).  The analytic
+        backend has no physical cache — routing-level counters live on the
+        policy (`prefix_stats`) — so the base answer is empty; the engine
+        backend aggregates its paged pools' real counters."""
+        return {}
+
 
 class SimBackend(ExecutionBackend):
     """Analytic execution: completion fires at ``start + duration`` where

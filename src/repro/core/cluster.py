@@ -28,6 +28,7 @@ property suite runs it after every dispatch pass.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Set
 
@@ -51,6 +52,8 @@ class ClusterConfig:
     max_coloc_tokens: int = 2048        # colocation cap per replica (paper §5.2)
     max_decode_concurrency: int = 64    # per decode replica
     decode_batch_eff: int = 8           # effective batching for decode tput
+    kv_block_size: int = 16             # paged-KV block (prefix-cache grain)
+    prefix_cache_groups: int = 64       # resident prefix groups per replica
 
     @property
     def n_gpus(self) -> int:
@@ -221,6 +224,72 @@ class ReplicaState:
         return out
 
 
+class PrefixResidency:
+    """Per-replica map of which prefix GROUPS have KV resident, and how many
+    leading tokens of the group's context each replica holds — the
+    dispatch-time cache-affinity signal (analytic twin of the engines'
+    block-hash index).
+
+    Residency is block-quantized (`block_size`, matching the paged pool's
+    grain: only whole blocks are shareable) and bounded per replica to
+    `max_groups` groups with LRU eviction — a replica's HBM does not hold
+    unbounded stale prefixes, and neither does this map.  Deliberately NOT
+    part of `ClusterIndex.expected()`/`audit()`: it is advisory routing
+    state (a stale entry costs performance, never correctness), not a
+    membership set derived from replica fields."""
+
+    __slots__ = ("block_size", "max_groups", "_maps")
+
+    def __init__(self, n_replicas: int, *, block_size: int = 16,
+                 max_groups: int = 64):
+        self.block_size = max(int(block_size), 1)
+        self.max_groups = max(int(max_groups), 1)
+        self._maps: Dict[int, "OrderedDict[int, int]"] = {
+            rid: OrderedDict() for rid in range(n_replicas)}
+
+    def _blocks(self, tokens: int) -> int:
+        return (tokens // self.block_size) * self.block_size
+
+    def cached_tokens(self, rid: int, group: Optional[int],
+                      prefix_len: int) -> int:
+        """Whole-block tokens of `group`'s prefix resident on `rid` that a
+        request with `prefix_len` reusable tokens could actually skip."""
+        if group is None or prefix_len <= 0:
+            return 0
+        m = self._maps.get(rid)
+        if m is None:
+            return 0
+        have = m.get(group, 0)
+        return self._blocks(min(have, prefix_len))
+
+    def record(self, rid: int, group: Optional[int], tokens: int) -> None:
+        """After a prefill on `rid`: the group's resident context grows to
+        at least `tokens` (LRU-touch; bounded per replica)."""
+        if group is None or tokens <= 0:
+            return
+        m = self._maps.setdefault(rid, OrderedDict())
+        have = m.pop(group, 0)
+        m[group] = max(have, self._blocks(tokens))
+        while len(m) > self.max_groups:
+            m.popitem(last=False)
+
+    def best_replica(self, candidates, group: Optional[int],
+                     prefix_len: int):
+        """(replica id, cached tokens) maximizing the block-rounded hit over
+        `candidates`; ties break to the lowest rid (the historical scan
+        order).  (None, 0) when nothing is resident."""
+        best_rid, best = None, 0
+        for rid in sorted(candidates):
+            c = self.cached_tokens(rid, group, prefix_len)
+            if c > best:
+                best_rid, best = rid, c
+        return best_rid, best
+
+    def clear(self) -> None:
+        for m in self._maps.values():
+            m.clear()
+
+
 class ClusterIndex:
     """Incrementally-maintained membership sets over a replica list.
 
@@ -253,7 +322,7 @@ class ClusterIndex:
                  "free_general", "active_pool", "draining_pool",
                  "long_decode", "coloc_room",
                  "max_coloc_tokens", "claims", "pool_decode_load",
-                 "n_queries", "n_rescans")
+                 "n_queries", "n_rescans", "prefix_residency")
 
     def __init__(self, replicas: List[ReplicaState],
                  max_coloc_tokens: Optional[int] = None):
@@ -271,6 +340,10 @@ class ClusterIndex:
         self.pool_decode_load = 0
         self.n_queries = 0              # profile: index-backed lookups
         self.n_rescans = 0              # profile: O(R) fallback scans
+        # Advisory cache-affinity map; policies that route on prefix
+        # residency replace this with one sized from their ClusterConfig.
+        # Excluded from expected()/audit() by design (see PrefixResidency).
+        self.prefix_residency = PrefixResidency(len(replicas))
         for rep in replicas:
             rep._index = self
             if rep._claimed_by is not None:     # pragma: no cover - defensive

@@ -151,8 +151,8 @@ class ExecutionModel:
 
     # ------------------------------------------------------------------
     def prefill_time(self, input_len: int, n_replicas: int = 1, *,
-                     sp_mode: str = "fastsp", batch_extra_tokens: int = 0
-                     ) -> float:
+                     sp_mode: str = "fastsp", batch_extra_tokens: int = 0,
+                     cached_tokens: int = 0) -> float:
         """Prefill latency on `n_replicas` replicas (SP across them).
 
         sp_mode: "fastsp" (paper's hybrid) | "ring" (ring-attention-only
@@ -160,24 +160,40 @@ class ExecutionModel:
         Ring-only pays (a) per-hop KV transfer that is NOT overlapped when
         segments are short, and (b) reduced MXU efficiency on short segments
         (paper cites [28]: ring efficiency degrades with ring length).
+        cached_tokens: leading tokens whose KV is already resident (prefix
+        cache hit) — their FLOPs are skipped; the suffix still attends over
+        the full context, so only the cached prefix's own compute is saved.
         Memoized: the model is deterministic in its arguments (and the
         fast-SP calibration curve, which clears the table on change).
+        The memo key is extended ONLY when cached_tokens > 0, so every
+        pre-existing call site keeps its exact key (decision parity).
         """
-        key = (input_len, n_replicas, sp_mode, batch_extra_tokens)
+        if cached_tokens <= 0:
+            key = (input_len, n_replicas, sp_mode, batch_extra_tokens)
+        else:
+            cached_tokens = min(cached_tokens, max(input_len - 1, 0))
+            key = (input_len, n_replicas, sp_mode, batch_extra_tokens,
+                   cached_tokens)
         hit = self._prefill_cache.get(key)
         if hit is not None:
             return hit
         if len(self._prefill_cache) >= self._CACHE_CAP:
             self._prefill_cache.clear()
         val = self._prefill_time(input_len, n_replicas, sp_mode,
-                                 batch_extra_tokens)
+                                 batch_extra_tokens, cached_tokens)
         self._prefill_cache[key] = val
         return val
 
     def _prefill_time(self, input_len: int, n_replicas: int, sp_mode: str,
-                      batch_extra_tokens: int) -> float:
+                      batch_extra_tokens: int, cached_tokens: int = 0
+                      ) -> float:
         chips = self.replica.tp * max(n_replicas, 1)
         flops = self.prefill_flops(input_len + batch_extra_tokens)
+        if cached_tokens > 0:
+            # skip the cached prefix's own compute (its attention is over
+            # earlier tokens only — exactly prefill_flops of the prefix)
+            flops = max(flops - self.prefill_flops(cached_tokens),
+                        flops * 1e-3)
         t_comp = flops / (chips * self._mxu_eff)
         if n_replicas <= 1 or sp_mode == "local":
             return t_comp
@@ -197,7 +213,8 @@ class ExecutionModel:
         speedup = self.sp_speedup(n_replicas)
         if speedup is not None:
             t1 = self.prefill_time(input_len, 1, sp_mode="local",
-                                   batch_extra_tokens=batch_extra_tokens)
+                                   batch_extra_tokens=batch_extra_tokens,
+                                   cached_tokens=cached_tokens)
             return t1 / max(speedup, 1e-6)
         # ... else the planner's closed form: inner A2A/allgather keeps MXU
         # busy on full segments; per-layer comm overlaps ~all but one hop

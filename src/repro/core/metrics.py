@@ -204,6 +204,7 @@ def _summarize_streaming(policy, acc: MetricsAccumulator,
         "gpu_idle_rate": _idle_rate(policy, t_end),
         "role_flips": len(getattr(policy, "role_log", ())),
     }
+    out.update(_prefix_cache_fields(policy))
     roles = _role_breakdown(policy, t_end)
     if roles is not None:
         out.update(roles)
@@ -295,6 +296,10 @@ def summarize(policy, t_end: float) -> Dict:
         # (0 for every static policy)
         "role_flips": len(getattr(policy, "role_log", ())),
     }
+    # prefix-cache routing (pecsched/cache): dispatch-time lookups/hits and
+    # the prefill FLOPs the resident prefixes skipped (0 for cache-free
+    # policies — the claims cells compare against exactly that zero)
+    out.update(_prefix_cache_fields(policy))
     roles = _role_breakdown(policy, t_end)
     if roles is not None:
         out.update(roles)
@@ -302,6 +307,23 @@ def summarize(policy, t_end: float) -> Dict:
     if per_tenant is not None:
         out["per_tenant"] = per_tenant
     return out
+
+
+def _prefix_cache_fields(policy) -> Dict:
+    """Prefix-cache counters, identical in the retained and streaming
+    paths (they read policy-side dispatch counters, not request lists)."""
+    ps = getattr(policy, "prefix_stats", None)
+    if not ps:
+        return {"prefix_lookups": 0, "prefix_hits": 0,
+                "prefix_hit_rate": 0.0, "prefill_flops_saved": 0.0}
+    lookups = int(ps.get("lookups", 0))
+    hits = int(ps.get("hits", 0))
+    return {
+        "prefix_lookups": lookups,
+        "prefix_hits": hits,
+        "prefix_hit_rate": (hits / lookups) if lookups else 0.0,
+        "prefill_flops_saved": float(ps.get("flops_saved", 0.0)),
+    }
 
 
 def _role_breakdown(policy, t_end: float) -> Optional[Dict]:
@@ -434,7 +456,8 @@ def ci95(values: Sequence[float]) -> Dict[str, Optional[float]]:
 AGGREGATE_KEYS = ("short_qd_mean", "short_rps", "long_jct_mean",
                   "long_starved_frac", "preemptions", "gpu_idle_rate",
                   "short_slowdown_mean", "long_slowdown_mean",
-                  "decode_preemptions", "role_flips")
+                  "decode_preemptions", "role_flips",
+                  "prefix_hit_rate", "prefill_flops_saved")
 
 
 def aggregate_seeds(summaries: Iterable[Dict],

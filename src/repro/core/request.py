@@ -26,6 +26,13 @@ class Request:
     tenant: Optional[str] = None   # multi-tenant scenarios: originating tenant
     session: Optional[int] = None  # chat scenarios: multi-turn session id
 
+    # --- prefix-cache identity (scenario-owned, scheduler-visible) ---
+    # group id whose earlier requests computed this prompt's leading tokens
+    # (session for chat, system-prompt id for shared_prefix); None = opaque
+    prefix_group: Optional[int] = None
+    prefix_len: int = 0            # leading tokens reusable from the group
+    prefix_write: int = 0          # tokens this request leaves resident
+
     # --- runtime bookkeeping (simulator-owned) ---
     phase: Phase = Phase.QUEUED
     prefill_start: Optional[float] = None   # first time prefill work began

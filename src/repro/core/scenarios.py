@@ -19,6 +19,8 @@ across every regime with `get_scenario(name)`:
                     codegen) with distinct rate and length mixes
     chat_multiturn  session-correlated follow-ups: each turn's input carries
                     the accumulated conversation context
+    shared_prefix   many users, few shared system prompts, bursty arrivals —
+                    the millions-of-users prefix-cache regime
     csv             replay a real Azure-trace-format file (pass path=...)
 
 Every builder takes (n_requests, seed, **overrides) and is deterministic
@@ -194,7 +196,8 @@ def chat_multiturn(n_requests: int, seed: int, *, arrival_rps: float = 10.0,
                    prompt_sigma: float = 0.8,
                    output_mu: float = math.log(180.0),
                    output_sigma: float = 0.7, output_max: int = 800,
-                   input_max: int = 64_000) -> List[Request]:
+                   input_max: int = 64_000,
+                   long_threshold: int = 2048) -> List[Request]:
     rng = np.random.default_rng(seed)
     session_rate = arrival_rps / mean_turns
     out: List[Request] = []
@@ -212,12 +215,79 @@ def chat_multiturn(n_requests: int, seed: int, *, arrival_rps: float = 10.0,
             output = int(np.clip(rng.lognormal(output_mu, output_sigma),
                                  1, output_max))
             inp = min(context + prompt, input_max)
+            # growing context crosses the paper's 2K short/long boundary
+            # routinely (~27% of a 2000-request seed-0 trace); classify by
+            # the same threshold trace generation uses (core/trace.py)
+            truncated = context + prompt > input_max
             out.append(Request(rid=len(out), arrival=t, input_len=inp,
-                               output_len=output, is_long=False,
-                               tenant="chat", session=sid))
+                               output_len=output,
+                               is_long=inp >= long_threshold,
+                               tenant="chat", session=sid,
+                               prefix_group=sid,
+                               # the leading `context` tokens are exactly the
+                               # previous turn's input+output — reusable from
+                               # cache unless truncation broke the identity
+                               prefix_len=0 if truncated else context,
+                               prefix_write=inp + output))
             context = inp + output
             t += rng.exponential(think_mean)
         sid += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shared-prefix: many independent users, few long system prompts. Every
+# request's input starts with one of `n_prompts` fixed system prompts (Zipf
+# popularity), followed by a short user-specific message — the
+# millions-of-users shape where a prefix cache pays off on the *system
+# prompt* rather than per-session context. Arrivals are 2-state MMPP so the
+# scenario doubles as the affinity-vs-balance burst stress.
+# ---------------------------------------------------------------------------
+@register_scenario("shared_prefix",
+                   "many users, few shared system prompts, bursty arrivals")
+def shared_prefix(n_requests: int, seed: int, *, arrival_rps: float = 10.0,
+                  n_prompts: int = 8,
+                  sys_mu: float = math.log(1500.0), sys_sigma: float = 0.7,
+                  sys_min: int = 256, sys_max: int = 8192,
+                  user_mu: float = math.log(120.0), user_sigma: float = 0.8,
+                  user_max: int = 2000,
+                  output_mu: float = math.log(180.0),
+                  output_sigma: float = 0.7, output_max: int = 800,
+                  burst_factor: float = 8.0, burst_frac: float = 0.15,
+                  mean_cycle: float = 60.0,
+                  long_threshold: int = 2048) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    # fixed system-prompt lengths, drawn once per trace
+    sys_lens = np.clip(rng.lognormal(sys_mu, sys_sigma, size=n_prompts),
+                       sys_min, sys_max).astype(int)
+    # Zipf popularity: a couple of prompts dominate, the rest are a tail
+    weights = 1.0 / np.arange(1, n_prompts + 1)
+    weights /= weights.sum()
+    # 2-state MMPP: rates chosen so the long-run mean equals arrival_rps
+    base = arrival_rps / (1.0 - burst_frac + burst_frac * burst_factor)
+    rates = (base, base * burst_factor)
+    durations = (mean_cycle * (1.0 - burst_frac), mean_cycle * burst_frac)
+    out: List[Request] = []
+    t, state = 0.0, 0
+    state_end = rng.exponential(durations[0])
+    while len(out) < n_requests:
+        t += rng.exponential(1.0 / rates[state])
+        while t > state_end:                       # advance the phase chain
+            state = 1 - state
+            state_end += rng.exponential(durations[state])
+        p = int(rng.choice(n_prompts, p=weights))
+        sys_len = int(sys_lens[p])
+        user = int(np.clip(rng.lognormal(user_mu, user_sigma), 8, user_max))
+        output = int(np.clip(rng.lognormal(output_mu, output_sigma),
+                             1, output_max))
+        inp = sys_len + user
+        out.append(Request(rid=len(out), arrival=t, input_len=inp,
+                           output_len=output,
+                           is_long=inp >= long_threshold,
+                           prefix_group=p,
+                           # only the system prompt is shared across users;
+                           # the user suffix is never reusable
+                           prefix_len=sys_len, prefix_write=sys_len))
     return out
 
 

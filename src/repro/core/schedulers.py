@@ -19,6 +19,10 @@ PecSchedPolicy      §5 (full system)        Figs.9-11 (overall), Table 6/7
  pecsched/fsp       §6.4 ring-only SP       Fig.14 + Table 3/6 ablation
  pecsched/coord     §5.2 load-adaptive      coordination-vs-static claim
                     role coordination       cells (bursty / diurnal)
+ pecsched/cache     beyond-paper (vLLM-v1   prefix-cache hit-rate / TTFT
+  /cache_greedy     prefix caching): cache- claim cells (chat_multiturn,
+                    affinity routing +      shared_prefix) + the greedy
+                    discounted prefill      affinity-vs-balance ablation
 PredSJFPolicy       beyond-paper (ELIS /    prediction-robustness sweep
  sjf_pred[:pred]    Beyond-Prediction):     (EXPERIMENTS.md §Prediction-
  tail_aware[:pred]  predicted-SJF + decode- robustness) + pred_* claims
@@ -47,7 +51,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.core.cluster import (PREFILL_CAPABLE, ClusterConfig, ClusterIndex,
-                                ReplicaState, build_replicas)
+                                PrefixResidency, ReplicaState, build_replicas)
 from repro.core.coordinator import CoordinatorConfig, RoleCoordinator
 from repro.core.costmodel import ExecutionModel
 from repro.core.predictor import Predictor, make_predictor
@@ -661,6 +665,19 @@ class PecSchedPolicy(BasePolicy):
         kind = "short_prefill_coloc" if colocated else "short_prefill"
         self._start(t, kind, batch, rep_ids, d, colocated=colocated)
 
+    def _price_long_prefill(self, head, R, sp, rep_ids) -> float:
+        """Cost of `head`'s gang prefill on `rep_ids`.  Hook: the cache-aware
+        subclass discounts resident prefixes here; the base price is the
+        historical expression, byte-identical (same memo key)."""
+        return self.em.prefill_time(head.input_len, R, sp_mode=sp)
+
+    def _order_long_candidates(self, t, head, cands):
+        """Hook: claim-order preference over the busy/end-sorted candidate
+        list.  The cache-aware subclass steers a long's claim toward the
+        replica holding its session's resident context; the base keeps the
+        historical order untouched."""
+        return cands
+
     def _pause_long(self, t, st: LongState):
         """Suspend a running long prefill (or decode under /CoL)."""
         if self.record_decisions:
@@ -753,6 +770,7 @@ class PecSchedPolicy(BasePolicy):
                 cands = [reps[i] for i in sorted(idx.free_general)]
                 cands.sort(key=lambda r: (r._work is not None,
                                           r._work.end if r._work else 0.0))
+                cands = self._order_long_candidates(t, head, cands)
                 for r in cands:
                     if len(claimed) >= R:
                         break
@@ -769,11 +787,12 @@ class PecSchedPolicy(BasePolicy):
                 r.long_rid = head.rid
                 r.long_phase = "prefill"
             sp = "fastsp" if self.fastsp else "ring"
-            d = em.prefill_time(head.input_len, R, sp_mode=sp)
+            rep_ids = [r.rid for r in claimed]
+            d = self._price_long_prefill(head, R, sp, rep_ids)
             head.phase = Phase.PREFILL
             head.prefill_start = t
             self._long_seq += 1
-            st = LongState(req=head, rep_ids=[r.rid for r in claimed],
+            st = LongState(req=head, rep_ids=rep_ids,
                            sp_mode=sp, seq=self._long_seq)
             self.longs[head.rid] = st
             self._victims[head.rid] = st
@@ -844,6 +863,241 @@ class PecSchedPolicy(BasePolicy):
         for r in self.long_queue:
             if r.prefill_start is None:
                 r.phase = Phase.STARVED
+
+
+# ===========================================================================
+# Prefix-cache-aware PecSched (beyond-paper: vLLM-v1 prefix caching as a
+# cluster-level routing signal — the ROADMAP's "cache-affinity at
+# millions-of-users scale" item).
+# ===========================================================================
+class PecSchedCachePolicy(PecSchedPolicy):
+    """PecSched + block-granular prefix-cache affinity.
+
+    Two additions over the base policy, both driven by a `PrefixResidency`
+    map (the analytic twin of the engines' block-hash index, sized from the
+    ClusterConfig's paged-KV grain):
+
+    * **Routing** — among idle prefill-capable replicas, a short batch goes
+      to the replica holding the most whole-block resident tokens of the
+      head request's prefix group (session context for `chat_multiturn`,
+      system prompt for `shared_prefix`); load balance breaks ties and
+      takes over when nothing is resident.
+    * **Pricing** — a placed request's resident prefix skips its own
+      prefill compute: the batch duration is discounted per request via
+      `ExecutionModel.prefill_time(..., cached_tokens=...)`, and long gang
+      prefills discount against the gang's best resident copy.
+
+    Decisions read only policy-side state (the residency map), so the sim
+    and engine backends make identical choices — the cross-backend parity
+    contract holds for this policy unmodified.
+
+    ``greedy=True`` is the affinity-vs-balance ablation
+    (`pecsched/cache_greedy`): the router follows residency wherever it
+    lives, holding the queue for a BUSY replica that has the head's prefix
+    rather than balancing onto an idle one.  Under bursty arrivals this
+    must lose on p99 short queueing delay — the claims suite pins that
+    tension as a falsifiable cell.
+    """
+
+    name = "pecsched/cache"
+
+    def __init__(self, cc, em, *, greedy: bool = False, **kw):
+        super().__init__(cc, em, **kw)
+        self.greedy = greedy
+        self.residency = PrefixResidency(
+            len(self.replicas), block_size=cc.kv_block_size,
+            max_groups=cc.prefix_cache_groups)
+        # expose on the index so examples/diagnostics find it where the
+        # advisory default lives (ClusterIndex.prefix_residency)
+        self.index.prefix_residency = self.residency
+        #: dispatch-time prefix-cache counters; metrics.summarize reads
+        #: them into prefix_hit_rate / prefill_flops_saved
+        self.prefix_stats = {"lookups": 0, "hits": 0, "hit_tokens": 0,
+                             "flops_saved": 0.0}
+        self.name = "pecsched/cache_greedy" if greedy else "pecsched/cache"
+
+    # ---- affinity signal ----------------------------------------------
+    def _affinity_candidates(self) -> List[int]:
+        """Prefill-capable replicas the greedy router may wait for: any
+        role in PREFILL_CAPABLE that is not claimed and not in a long
+        gang — busy-with-short is exactly what greedy waits out."""
+        out = []
+        reps = self.replicas
+        for role in PREFILL_CAPABLE:
+            for rid in self.index.by_role[role]:
+                r = reps[rid]
+                if r._claimed_by is None and r._long_rid is None:
+                    out.append(rid)
+        return out
+
+    def _lookup(self, rid: int, req: Request) -> int:
+        """Counted residency probe for one placed request on `rid`."""
+        if req.prefix_group is None or req.prefix_len <= 0:
+            return 0
+        stats = self.prefix_stats
+        stats["lookups"] += 1
+        c = self.residency.cached_tokens(rid, req.prefix_group,
+                                         req.prefix_len)
+        if c > 0:
+            stats["hits"] += 1
+            stats["hit_tokens"] += c
+            stats["flops_saved"] += self.em.prefill_flops(c)
+        return c
+
+    # ---- pricing ------------------------------------------------------
+    def _start_short_prefill(self, t, batch, rep_ids, *, colocated=False):
+        if colocated or len(rep_ids) != 1:
+            # coloc / preemption-gang paths split tokens across replicas;
+            # residency is per replica, so they keep the base price (and
+            # leave no resident prefix behind — KV migrates off)
+            super()._start_short_prefill(t, batch, rep_ids,
+                                         colocated=colocated)
+            return
+        rid = rep_ids[0]
+        em = self.em
+        res = self.residency
+        tokens = 0
+        d = 0.0
+        for r in batch:
+            tokens += r.input_len
+            c = self._lookup(rid, r)
+            if c > 0:
+                # per-request saving: this request's full-length price
+                # minus its suffix-only price (both memoized)
+                d -= (em.prefill_time(r.input_len, 1, sp_mode="local")
+                      - em.prefill_time(r.input_len, 1, sp_mode="local",
+                                        cached_tokens=c))
+            # record AFTER the lookup: a later request in this batch can
+            # hit what an earlier one just wrote (the engines' per-request
+            # admit order does exactly this)
+            res.record(rid, r.prefix_group, r.prefix_write)
+        d += em.prefill_time(tokens, 1, sp_mode="local")
+        d = max(d, em.prefill_time(tokens, 1, sp_mode="local") * 1e-3)
+        for r in batch:
+            r.phase = Phase.PREFILL
+            if r.prefill_start is None:
+                r.prefill_start = t
+        self._start(t, "short_prefill", batch, rep_ids, d)
+
+    def _price_long_prefill(self, head, R, sp, rep_ids) -> float:
+        # the gang's best resident copy discounts the prefill; the grown
+        # context lands on the gang's home replica (rep_ids[0])
+        c = 0
+        if head.prefix_group is not None and head.prefix_len > 0:
+            stats = self.prefix_stats
+            stats["lookups"] += 1
+            c = max(self.residency.cached_tokens(rid, head.prefix_group,
+                                                 head.prefix_len)
+                    for rid in rep_ids)
+            if c > 0:
+                stats["hits"] += 1
+                stats["hit_tokens"] += c
+                stats["flops_saved"] += self.em.prefill_flops(c)
+        self.residency.record(rep_ids[0], head.prefix_group,
+                              head.prefix_write)
+        return self.em.prefill_time(head.input_len, R, sp_mode=sp,
+                                    cached_tokens=c)
+
+    # ---- routing ------------------------------------------------------
+    def _peek_batch(self, queue, max_tokens) -> List[Request]:
+        """The batch `_batch_shorts` WOULD pop, without popping — same
+        consecutive-heads walk, same single-oversize fallback."""
+        out, tok = [], 0
+        for r in queue:
+            if tok + r.input_len > max_tokens:
+                break
+            out.append(r)
+            tok += r.input_len
+        if not out and queue:
+            out.append(queue[0])
+        return out
+
+    def _batch_affinity(self, rid: int, batch) -> int:
+        """Resident whole-block tokens this batch could reuse on `rid`."""
+        res = self.residency
+        return sum(res.cached_tokens(rid, r.prefix_group, r.prefix_len)
+                   for r in batch
+                   if r.prefix_group is not None and r.prefix_len > 0)
+
+    def _order_long_candidates(self, t, head, cands):
+        # steer the long's claim toward its session's resident context —
+        # but only when the reuse pays: a busy replica's residual drain
+        # time is weighed against the prefill compute the resident prefix
+        # would skip.  With nothing resident anywhere the keys collapse to
+        # (wait, busy, end) == the base busy/end order exactly.
+        if head.prefix_group is None or head.prefix_len <= 0:
+            return cands
+        res = self.residency
+        em = self.em
+        full = em.prefill_time(head.input_len, 1, sp_mode="local")
+
+        def key(r):
+            c = res.cached_tokens(r.rid, head.prefix_group, head.prefix_len)
+            saved = 0.0
+            if c > 0:
+                saved = full - em.prefill_time(head.input_len, 1,
+                                               sp_mode="local",
+                                               cached_tokens=c)
+            wait = max(0.0, r._work.end - t) if r._work is not None else 0.0
+            return (wait - saved, r._work is not None,
+                    r._work.end if r._work else 0.0)
+
+        return sorted(cands, key=key)
+
+    def _dispatch_shorts(self, t):
+        idx = self.index
+        while self.short_queue:
+            placed = False
+            if idx.idle_prefill:
+                peek = self._peek_batch(self.short_queue,
+                                        self.cc.max_batch_tokens)
+                # affinity score = resident tokens the WHOLE batch reuses
+                # (head-only scoring lets mixed-session batches drag every
+                # non-head session's residency to a new replica each turn)
+                rid0, best = None, 0
+                for rid in sorted(idx.idle_prefill):
+                    a = self._batch_affinity(rid, peek)
+                    if a > best:
+                        rid0, best = rid, a
+                if self.greedy:
+                    bb_rid, bb = None, best
+                    for rid in self._affinity_candidates():
+                        if rid in idx.idle_prefill:
+                            continue
+                        a = self._batch_affinity(rid, peek)
+                        if a > bb:
+                            bb_rid, bb = rid, a
+                    if bb_rid is not None:
+                        # cache-greedy: the best copy lives on a busy
+                        # replica — hold the whole queue for it (this HOL
+                        # wait is the ablation's p99 tax under burst)
+                        return
+                if rid0 is None:
+                    rid0 = min(idx.idle_prefill)   # balance: base pick
+                batch = self._batch_shorts(self.short_queue,
+                                           self.cc.max_batch_tokens)
+                self._start_short_prefill(t, batch, [rid0])
+                placed = True
+            elif self.coloc and idx.coloc_room:
+                cands = [self.replicas[i] for i in sorted(idx.coloc_room)]
+                cap = sum(self.cc.max_coloc_tokens - r.coloc_tokens
+                          for r in cands)
+                batch = self._batch_shorts(self.short_queue, cap)
+                self._start_short_prefill(t, batch,
+                                          [r.rid for r in cands],
+                                          colocated=True)
+                placed = True
+            if not placed and self.preemption:
+                if self._victims:
+                    st = max(self._victims.values(),
+                             key=lambda s: (len(s.rep_ids), -s.seq))
+                    self._pause_long(t, st)
+                    cap = self.cc.max_batch_tokens * len(st.rep_ids)
+                    batch = self._batch_shorts(self.short_queue, cap)
+                    self._start_short_prefill(t, batch, st.rep_ids)
+                    placed = True
+            if not placed:
+                return
 
 
 # ===========================================================================
@@ -1146,7 +1400,8 @@ class TailAwarePolicy(PredSJFPolicy):
 # the bare names default to the mid-σ classifier `noisy0.6`.
 POLICY_NAMES = ("fifo", "fifo_noshort", "reservation", "priority", "pecsched",
                 "pecsched/pe", "pecsched/dis", "pecsched/col", "pecsched/fsp",
-                "pecsched/coord", "sjf_pred", "tail_aware")
+                "pecsched/coord", "pecsched/cache", "pecsched/cache_greedy",
+                "sjf_pred", "tail_aware")
 
 
 def make_policy(name: str, cc: ClusterConfig, em: ExecutionModel) -> BasePolicy:
@@ -1171,6 +1426,10 @@ def make_policy(name: str, cc: ClusterConfig, em: ExecutionModel) -> BasePolicy:
         return PecSchedPolicy(cc, em, fastsp=False)
     if name == "pecsched/coord":  # §5.2 load-adaptive role coordination
         return PecSchedPolicy(cc, em, coordination="adaptive")
+    if name == "pecsched/cache":  # prefix-cache affinity routing + pricing
+        return PecSchedCachePolicy(cc, em)
+    if name == "pecsched/cache_greedy":  # affinity-vs-balance ablation
+        return PecSchedCachePolicy(cc, em, greedy=True)
     if name == "sjf_pred" or name.startswith("sjf_pred:"):
         spec = name.partition(":")[2] or "noisy0.6"
         return PredSJFPolicy(cc, em, predictor_spec=spec)

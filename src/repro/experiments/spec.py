@@ -16,7 +16,8 @@ from typing import Dict, List, Sequence, Tuple
 
 #: bump when summary structure or workload construction changes meaning —
 #: every cached result keyed under the old version stops matching
-SCHEMA_VERSION = 3        # 3: decode_preemptions field in metrics.summarize
+SCHEMA_VERSION = 4        # 4: prefix-cache fields in metrics.summarize +
+#                              chat_multiturn long-classification fix
 
 BACKENDS = ("sim", "engine")
 

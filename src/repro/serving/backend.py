@@ -110,6 +110,11 @@ class EngineBackend(ExecutionBackend):
         self._buckets = [b for b in _BUCKETS if b <= self.max_prompt]
         self._engines: Dict[int, ReplicaEngine] = {}      # replica rid -> engine
         self._tokens: Dict[int, np.ndarray] = {}          # request rid -> prompt
+        # prefix-group token streams: requests in one group synthesize their
+        # shared leading tokens from one deterministic stream, so an engine
+        # that already prefilled an earlier group member holds byte-identical
+        # prefix blocks (persists across reset(): pure function of group)
+        self._group_streams: Dict[int, np.ndarray] = {}
         self._psessions: Dict[int, PrefillState] = {}     # in-flight prefills
         self._gangs: Dict[int, GangPrefillState] = {}     # in-flight gang SP
         self._dsessions: Dict[int, Dict] = {}             # in-flight long decodes
@@ -212,6 +217,16 @@ class EngineBackend(ExecutionBackend):
                 return b
         return self.max_prompt
 
+    def _group_stream(self, group: int) -> np.ndarray:
+        s = self._group_streams.get(group)
+        if s is None:
+            rng = np.random.default_rng((self.seed, 0x9E3779B9,
+                                         group & 0x7FFFFFFF))
+            s = rng.integers(0, self.cfg.vocab_size,
+                             self.max_prompt).astype(np.int32)
+            self._group_streams[group] = s
+        return s
+
     def _prompt(self, req: Request) -> np.ndarray:
         toks = self._tokens.get(req.rid)
         if toks is None:
@@ -222,6 +237,13 @@ class EngineBackend(ExecutionBackend):
                 rng = np.random.default_rng((self.seed,
                                              req.rid & 0x7FFFFFFF))
                 toks = rng.integers(0, self.cfg.vocab_size, n)
+                if req.prefix_group is not None and req.prefix_len > 0:
+                    # leading tokens come from the group's shared stream —
+                    # scaled like the lengths, so the cluster-scale prefix
+                    # relationship survives onto engine-sized prompts
+                    p = min(self._scale_len(req.prefix_len), n)
+                    toks = np.asarray(toks)
+                    toks[:p] = self._group_stream(req.prefix_group)[:p]
             toks = np.asarray(toks, np.int32)
             if toks.shape[0] > self.max_len - 1:
                 raise ValueError(
@@ -245,8 +267,21 @@ class EngineBackend(ExecutionBackend):
         return out, dt
 
     def _start_prefill(self, eng: ReplicaEngine, req: Request) -> PrefillState:
-        st, _ = self._timed(eng.start_prefill, req.rid,
-                            jnp.asarray(self._prompt(req)[None]))
+        prompt = self._prompt(req)
+        host = tuple(int(t) for t in prompt)
+        pk = pv = None
+        if req.prefix_group is not None:
+            # probe this engine's block-hash index: a hit turns the prefill
+            # into a suffix-only one (the reused blocks' layers are skipped)
+            hit, pk, pv = eng.lookup_cached_prefix(host)
+            self.stats["prefix_lookups"] += 1
+            if hit.n_tokens:
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_hit_tokens"] += hit.n_tokens
+        st, _ = self._timed(
+            lambda: eng.start_prefill(req.rid, jnp.asarray(prompt[None]),
+                                      prefix_k=pk, prefix_v=pv,
+                                      host_tokens=host))
         return st
 
     def _prefill_quanta(self, eng: ReplicaEngine, st: PrefillState,
@@ -275,6 +310,18 @@ class EngineBackend(ExecutionBackend):
         dt += d
         self.generated[req.rid] = [int(jnp.argmax(logits[0]))]
         self._kv[req.rid] = st
+        if req.prefix_group is not None and st.host_tokens is not None:
+            # park the full prompt KV in THIS engine's prefix cache (admit
+            # + release -> cached-free list) so the group's next request
+            # routed here skips the shared blocks.  Bookkeeping copy, off
+            # the virtual clock — the analytic model prices the skip via
+            # prefill_time(cached_tokens=...), not this transfer.
+            k = jnp.stack(st.kv_k, 0)[:, 0]
+            v = jnp.stack(st.kv_v, 0)[:, 0]
+            if st.prefix_k is not None:
+                k = jnp.concatenate([st.prefix_k.astype(k.dtype), k], axis=2)
+                v = jnp.concatenate([st.prefix_v.astype(v.dtype), v], axis=2)
+            eng.cache_prompt(0x40000000 ^ req.rid, k, v, st.host_tokens)
         return dt
 
     # ---- gang-scheduled SP prefill (§5.3) ----------------------------
@@ -340,6 +387,18 @@ class EngineBackend(ExecutionBackend):
             self._parked_scatter[req.rid] = (k, v)
             self.stats["gang_scatter_deferred"] += 1
         return dt
+
+    def prefix_cache_stats(self) -> Dict[str, int]:
+        """Pool-level prefix-cache counters summed across engines, plus the
+        backend's own lookup tallies — the tooling/profile surface."""
+        out = Counter()
+        for eng in self._engines.values():
+            out.update(eng.kvpool.stats)
+        out["backend_lookups"] = int(self.stats.get("prefix_lookups", 0))
+        out["backend_hits"] = int(self.stats.get("prefix_hits", 0))
+        out["backend_hit_tokens"] = int(
+            self.stats.get("prefix_hit_tokens", 0))
+        return dict(out)
 
     def sp_per_layer_s(self) -> Dict[int, float]:
         """Median measured seconds/layer per SP degree (1 = no gang)."""

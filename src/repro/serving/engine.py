@@ -22,15 +22,16 @@ batching at the iteration level.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.models import layers as L
 from repro.models import model as mdl
-from repro.serving.kvcache import PagedKVCache
+from repro.serving.kvcache import PagedKVCache, PrefixHit
 
 
 class SlotsFull(RuntimeError):
@@ -46,13 +47,26 @@ class SlotsFull(RuntimeError):
 
 @dataclass
 class PrefillState:
-    """Suspension state of a paused prefill (paper §5.1)."""
+    """Suspension state of a paused prefill (paper §5.1).
+
+    A prefix-cache hit turns this into a SUFFIX prefill: `x` covers only
+    the uncached suffix tokens (prefix_len fewer positions of compute per
+    layer) while `prefix_k`/`prefix_v` carry the reused KV gathered from
+    the pool — `tokens` stays the FULL prompt, and admit() re-assembles
+    full-sequence KV, so everything downstream is oblivious to the hit."""
     rid: int
-    tokens: jnp.ndarray                   # (1, S) int32
-    x: jnp.ndarray                        # (1, S, d) — current intermediate
+    tokens: jnp.ndarray                   # (1, S) int32 — ALWAYS full prompt
+    x: jnp.ndarray                        # (1, S_suffix, d) — intermediate
     layer: int                            # next layer to execute
     kv_k: List[jnp.ndarray] = field(default_factory=list)   # per-layer (1,KV,S,hd)
     kv_v: List[jnp.ndarray] = field(default_factory=list)
+    prefix_k: Optional[jnp.ndarray] = None   # (L, KV, P, hd) reused KV
+    prefix_v: Optional[jnp.ndarray] = None
+    host_tokens: Optional[Tuple[int, ...]] = None  # full prompt, host ints
+
+    @property
+    def prefix_len(self) -> int:
+        return 0 if self.prefix_k is None else self.prefix_k.shape[2]
 
     def intermediate_bytes(self) -> int:
         return self.x.size * self.x.dtype.itemsize
@@ -96,6 +110,8 @@ class ReplicaEngine:
         self._embed = jax.jit(self._embed_fn)
         self._layer_slice = jax.jit(self._layer_slice_fn,
                                     static_argnames=("lo", "hi"))
+        self._suffix_slice = jax.jit(self._suffix_slice_fn,
+                                     static_argnames=("lo", "hi"))
         self._finalize = jax.jit(self._finalize_fn)
         self._decode = jax.jit(self._decode_fn)
 
@@ -118,6 +134,45 @@ class ReplicaEngine:
         x, kvs = jax.lax.scan(body, x, sub)
         return x, kvs
 
+    def _suffix_slice_fn(self, x, pk, pv, *, lo: int, hi: int):
+        """Layer slice for a SUFFIX prefill: x covers only the uncached
+        suffix positions; pk/pv ((hi-lo), KV, P, hd) is the reused prefix
+        KV for these layers.  Mirrors `_dense_layer` exactly (same L.*
+        calls, same residual order) with attention over [prefix ‖ suffix]
+        at query offset P — the cache-hit path whose decoded tokens must
+        match a from-scratch prefill."""
+        cfg = self.cfg
+        sub = jax.tree.map(lambda a: a[lo:hi], self.params["layers"])
+        B, S, _ = x.shape
+        P = pk.shape[2]
+        H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        positions = jnp.broadcast_to(jnp.arange(P, P + S)[None], (B, S))
+
+        def body(x, inp):
+            pl, pkl, pvl = inp
+            attn = pl["attn"]
+            h = L.rms_norm(x, pl["ln1"], cfg.norm_eps)
+            q = L.linear(h, attn["wq"], attn.get("bq")).reshape(B, S, H, hd)
+            k = L.linear(h, attn["wk"], attn.get("bk")).reshape(B, S, KV, hd)
+            v = L.linear(h, attn["wv"], attn.get("bv")).reshape(B, S, KV, hd)
+            q = L.rope(q, positions, cfg.rope_theta)
+            k = L.rope(k, positions, cfg.rope_theta)
+            qh = q.transpose(0, 2, 1, 3)
+            kh = k.transpose(0, 2, 1, 3)               # (B, KV, S, hd)
+            vh = v.transpose(0, 2, 1, 3)
+            k_all = jnp.concatenate([pkl[None].astype(kh.dtype), kh], axis=2)
+            v_all = jnp.concatenate([pvl[None].astype(vh.dtype), vh], axis=2)
+            o = ops.attention(qh, k_all, v_all, causal=True,
+                              sliding_window=cfg.sliding_window,
+                              q_offset=P, impl="xla")
+            o = o.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+            x = x + L.linear(o, attn["wo"])
+            x = x + L.swiglu(L.rms_norm(x, pl["ln2"], cfg.norm_eps),
+                             pl["mlp"])
+            return x, L.KVCache(k=kh, v=vh)
+        x, kvs = jax.lax.scan(body, x, (sub, pk, pv))
+        return x, kvs
+
     def _finalize_fn(self, x):
         cfg = self.cfg
         x = L.rms_norm(x, self.params["final_norm"], cfg.norm_eps)
@@ -133,15 +188,33 @@ class ReplicaEngine:
         return logits, cache["k"], cache["v"], cache["len"]
 
     # ---- prefill (preemptible) ---------------------------------------------
-    def start_prefill(self, rid: int, tokens: jnp.ndarray) -> PrefillState:
+    def start_prefill(self, rid: int, tokens: jnp.ndarray,
+                      *, prefix_k: Optional[jnp.ndarray] = None,
+                      prefix_v: Optional[jnp.ndarray] = None,
+                      host_tokens: Optional[Tuple[int, ...]] = None
+                      ) -> PrefillState:
+        """Begin a (preemptible) prefill.  With `prefix_k`/`prefix_v`
+        ((L, KV, P, hd), e.g. from `lookup_cached_prefix`) only the suffix
+        beyond P is embedded and computed — the prefix's KV is reused."""
+        if prefix_k is not None:
+            P = prefix_k.shape[2]
+            x = self._embed(tokens[:, P:])
+            return PrefillState(rid=rid, tokens=tokens, x=x, layer=0,
+                                prefix_k=prefix_k, prefix_v=prefix_v,
+                                host_tokens=host_tokens)
         x = self._embed(tokens)
-        return PrefillState(rid=rid, tokens=tokens, x=x, layer=0)
+        return PrefillState(rid=rid, tokens=tokens, x=x, layer=0,
+                            host_tokens=host_tokens)
 
     def prefill_quantum(self, st: PrefillState) -> Tuple[PrefillState, bool]:
         """Run up to layers_per_quantum layers; returns (state, done)."""
         lo = st.layer
         hi = min(lo + self.lpq, self.cfg.num_layers)
-        x, kvs = self._layer_slice(st.x, lo=lo, hi=hi)
+        if st.prefix_k is not None:
+            x, kvs = self._suffix_slice(st.x, st.prefix_k[lo:hi],
+                                        st.prefix_v[lo:hi], lo=lo, hi=hi)
+        else:
+            x, kvs = self._layer_slice(st.x, lo=lo, hi=hi)
         st.x = x
         for i in range(hi - lo):
             st.kv_k.append(kvs.k[i])
@@ -183,11 +256,48 @@ class ReplicaEngine:
             self._invalidate_view()
 
     def clear(self) -> None:
-        """Evict every slot and release every resident request."""
+        """Evict every slot, release every resident request AND forget the
+        prefix cache — a cleared engine is bit-identical to a fresh one
+        (cross-run determinism for the policy-comparison harnesses)."""
         self.slot_rid = [None] * self.max_slots
         self._invalidate_view()
         for rid in list(self.kvpool.tables):
             self.kvpool.release(rid)
+        self.kvpool.drop_cache()
+
+    # ---- prefix cache --------------------------------------------------
+    def lookup_cached_prefix(self, host_tokens: Sequence[int]
+                             ) -> Tuple[PrefixHit, Optional[jnp.ndarray],
+                                        Optional[jnp.ndarray]]:
+        """Probe the pool's block-hash index for a resident prefix of
+        `host_tokens` and gather its KV.  Only FULL-block matches feed the
+        suffix-prefill (block-quantized prefix lengths keep the jit shape
+        set bounded); partial-tail hits still count in the pool's stats.
+        Returns (hit, prefix_k, prefix_v) — arrays are None on a miss."""
+        hit = self.kvpool.lookup_prefix(host_tokens)
+        # never reuse the WHOLE prompt: at least one suffix token must run
+        # so prefill_logits has a real last-position hidden state
+        while hit.blocks and hit.n_tokens >= len(host_tokens):
+            hit.blocks.pop()
+            hit.n_tokens -= self.block_size
+        if not hit.blocks:
+            return hit, None, None
+        full = PrefixHit(blocks=hit.blocks, n_tokens=hit.n_tokens)
+        pk, pv = self.kvpool.gather_prefix(full)
+        return hit, pk, pv
+
+    def cache_prompt(self, rid: int, k: jnp.ndarray, v: jnp.ndarray,
+                     host_tokens: Sequence[int]) -> None:
+        """Park a completed prompt's KV in the prefix cache: admit registers
+        the blocks in the hash index, the immediate release (refcount -> 0)
+        moves them to the cached-free list where future admits can share
+        them — and where any later allocation may evict them (LRU)."""
+        if rid in self.kvpool.tables:
+            return
+        if not self.kvpool.can_admit(k.shape[2]):
+            return                      # pool too tight to cache; skip
+        self.kvpool.admit(rid, k, v, tokens=host_tokens)
+        self.kvpool.release(rid)
 
     # ---- decode slots -------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -225,14 +335,20 @@ class ReplicaEngine:
         S = st.tokens.shape[1]
         if S > self.max_len:
             raise ValueError("sequence longer than engine max_len")
-        if len(self.kvpool.free) < self.blocks_per_seq:   # full decode budget
+        # full decode budget (cached-free blocks are evictable, so they
+        # count as available)
+        if (len(self.kvpool.free) + len(self.kvpool.cached)
+                < self.blocks_per_seq):
             raise SlotsFull(
                 f"KV pool cannot reserve a decode lane for request {rid}: "
                 f"{len(self.kvpool.free)} of {self.kvpool.n_blocks} "
                 f"blocks free, {self.blocks_per_seq} needed")
         k = jnp.stack(st.kv_k, 0)[:, 0]      # (L, KV, S, hd)
         v = jnp.stack(st.kv_v, 0)[:, 0]
-        self.kvpool.admit(rid, k, v)
+        if st.prefix_k is not None:          # re-assemble FULL-sequence KV
+            k = jnp.concatenate([st.prefix_k.astype(k.dtype), k], axis=2)
+            v = jnp.concatenate([st.prefix_v.astype(v.dtype), v], axis=2)
+        self.kvpool.admit(rid, k, v, tokens=st.host_tokens)
         self.kvpool.reserve(rid, self.max_len)
         slot = free[0]
         self.slot_rid[slot] = rid

@@ -3,16 +3,52 @@ substrate): a fixed pool of fixed-size blocks + per-request block tables.
 Non-contiguous physical storage eliminates fragmentation; gather by block
 table materializes the contiguous view the attention kernels consume.
 
+Prefix reuse (vLLM-v1-style): full blocks are indexed by a chain hash over
+their token content (h_i = hash((h_{i-1}, block_tokens))), so an admit whose
+prompt shares a cached prefix links the resident blocks into its own table
+(refcount++) instead of re-writing them — and the caller can skip those
+blocks' prefill compute entirely.  Blocks whose refcount drops to zero but
+that still carry a registered hash are parked on a `cached` free list (data
+retained, LRU-evicted only when a plain allocation needs room), so a prefix
+survives between requests — the property cross-turn chat reuse depends on.
+Tables are copy-on-write: `append_token` into a block another table still
+references forks a private copy first.
+
 Pure JAX: the pool is a pytree; allocation metadata is host-side (block
 tables are tiny and scheduler-owned, exactly as in vLLM).
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+def _chain_hash(parent: Optional[int], tokens: Tuple[int, ...]) -> int:
+    """Prefix-chain hash: identifies block CONTENT + everything before it.
+    Collisions are assumed absent (the standard vLLM trade; a collision
+    would silently alias two prefixes, acceptable for a simulator/repro)."""
+    return hash((parent, tokens))
+
+
+@dataclass
+class PrefixHit:
+    """Result of `lookup_prefix`: resident blocks covering a prompt prefix.
+
+    `blocks` are fully-matched blocks (every token identical); `tail_block`
+    (if any) matches only its first `tail_tokens` tokens — its KV rows can
+    be gathered to skip compute, but the block itself is never shared."""
+    blocks: List[int] = field(default_factory=list)
+    n_tokens: int = 0              # tokens covered by fully-matched blocks
+    tail_block: Optional[int] = None
+    tail_tokens: int = 0           # extra tokens matched inside tail_block
+
+    @property
+    def total_tokens(self) -> int:
+        return self.n_tokens + self.tail_tokens
 
 
 @dataclass
@@ -22,8 +58,20 @@ class PagedKVCache:
     v: jax.Array
     block_size: int
     free: List[int] = field(default_factory=list)
+    #: refcount-0 blocks with live hash registrations, oldest-first (LRU);
+    #: data is retained until a plain allocation evicts them
+    cached: "OrderedDict[int, None]" = field(default_factory=OrderedDict)
     tables: Dict[int, List[int]] = field(default_factory=dict)   # rid -> blocks
     lengths: Dict[int, int] = field(default_factory=dict)        # rid -> tokens
+    ref: Dict[int, int] = field(default_factory=dict)            # block -> refs
+    # --- block-hash index (full blocks) + partial-tail registry ---
+    chain: Dict[int, int] = field(default_factory=dict)          # hash -> block
+    block_hash: Dict[int, int] = field(default_factory=dict)     # block -> hash
+    tails: Dict[Optional[int], List[int]] = field(default_factory=dict)
+    tail_meta: Dict[int, Tuple[Optional[int], Tuple[int, ...]]] = \
+        field(default_factory=dict)
+    stats: Dict[str, int] = field(default_factory=lambda: dict(
+        lookups=0, hits=0, hit_tokens=0, blocks_shared=0, cow_forks=0))
 
     # ------------------------------------------------------------------
     @classmethod
@@ -42,40 +90,215 @@ class PagedKVCache:
         return -(-tokens // self.block_size)
 
     def can_admit(self, tokens: int) -> bool:
-        return len(self.free) >= self.blocks_needed(tokens)
+        return (len(self.free) + len(self.cached)
+                >= self.blocks_needed(tokens))
 
     # ------------------------------------------------------------------
-    def admit(self, rid: int, k: jax.Array, v: jax.Array) -> None:
-        """Install a request's prefill KV. k/v: (L, KV, S, hd)."""
+    # allocation: blank blocks first, then LRU-evict the cached-prefix list
+    # ------------------------------------------------------------------
+    def _alloc(self, n: int) -> List[int]:
+        if len(self.free) + len(self.cached) < n:
+            raise MemoryError(f"need {n} blocks, {len(self.free)} free + "
+                              f"{len(self.cached)} cached")
+        out = [self.free.pop() for _ in range(min(n, len(self.free)))]
+        while len(out) < n:
+            b, _ = self.cached.popitem(last=False)     # oldest first
+            self._unregister(b)
+            out.append(b)
+        return out
+
+    def _unregister(self, b: int) -> None:
+        h = self.block_hash.pop(b, None)
+        if h is not None and self.chain.get(h) == b:
+            del self.chain[h]
+        tm = self.tail_meta.pop(b, None)
+        if tm is not None:
+            lst = self.tails.get(tm[0])
+            if lst is not None:
+                lst.remove(b)
+                if not lst:
+                    del self.tails[tm[0]]
+
+    def _acquire(self, b: int) -> None:
+        """Take (or add) a reference on a resident block, reviving it from
+        the cached list if it was refcount-0."""
+        if b in self.cached:
+            del self.cached[b]
+        self.ref[b] = self.ref.get(b, 0) + 1
+
+    # ------------------------------------------------------------------
+    # prefix lookup
+    # ------------------------------------------------------------------
+    def lookup_prefix(self, tokens: Sequence[int]) -> PrefixHit:
+        """Longest resident prefix of `tokens`: fully-matched whole blocks
+        via the chain-hash index, plus a partial match inside one registered
+        tail block.  Read-only (no refcounts taken); callers that need the
+        blocks to survive a subsequent allocation must `admit` (full blocks)
+        or `gather_prefix` (copy out) before allocating."""
+        hit = PrefixHit()
+        self.stats["lookups"] += 1
+        bs = self.block_size
+        h: Optional[int] = None
+        i = 0
+        while i + bs <= len(tokens):
+            nh = _chain_hash(h, tuple(tokens[i:i + bs]))
+            b = self.chain.get(nh)
+            if b is None:
+                break
+            hit.blocks.append(b)
+            if b in self.cached:                   # LRU touch
+                self.cached.move_to_end(b)
+            h = nh
+            i += bs
+        hit.n_tokens = i
+        rem = tokens[i:]
+        if len(rem):
+            # partial-tail match: longest common prefix against registered
+            # tails hanging off the matched prefix's chain hash
+            best_b, best_n = None, 0
+            for tb in self.tails.get(h, []):
+                _, ttoks = self.tail_meta[tb]
+                n = 0
+                for a, c in zip(ttoks, rem):
+                    if a != c:
+                        break
+                    n += 1
+                if n > best_n:
+                    best_b, best_n = tb, n
+            if best_b is not None:
+                hit.tail_block, hit.tail_tokens = best_b, best_n
+                if best_b in self.cached:
+                    self.cached.move_to_end(best_b)
+        if hit.total_tokens:
+            self.stats["hits"] += 1
+            self.stats["hit_tokens"] += hit.total_tokens
+        return hit
+
+    def gather_prefix(self, hit: PrefixHit):
+        """Materialize a hit's KV as contiguous (L, KV, total_tokens, hd) —
+        the past-KV a suffix-only prefill attends over."""
+        blocks = list(hit.blocks)
+        if hit.tail_block is not None:
+            blocks.append(hit.tail_block)
+        idx = jnp.asarray(blocks)
+        k = self.k[:, idx]                     # (L, n, KV, bs, hd)
+        v = self.v[:, idx]
+        L, n, KV, bs, hd = k.shape
+        T = hit.total_tokens
+        k = k.transpose(0, 2, 1, 3, 4).reshape(L, KV, n * bs, hd)[:, :, :T]
+        v = v.transpose(0, 2, 1, 3, 4).reshape(L, KV, n * bs, hd)[:, :, :T]
+        return k, v
+
+    # ------------------------------------------------------------------
+    def admit(self, rid: int, k: jax.Array, v: jax.Array,
+              tokens: Optional[Sequence[int]] = None) -> PrefixHit:
+        """Install a request's prefill KV. k/v: (L, KV, S, hd) — always the
+        FULL sequence (a cache-hit caller still passes full KV; the matched
+        blocks' slices simply are not written).
+
+        With `tokens` (the prompt's token ids), fully-matched resident
+        blocks are linked into the table by reference (refcount++, data
+        untouched) and the newly-written full blocks + partial tail are
+        registered in the hash index for future admits.  Without `tokens`
+        the cache is opaque: plain allocate-and-write, nothing registered.
+        Returns the PrefixHit describing what was shared (empty when
+        tokens is None)."""
         if rid in self.tables:
             raise KeyError(f"rid {rid} already resident")
         L, KV, S, hd = k.shape
-        need = self.blocks_needed(S)
-        if len(self.free) < need:
-            raise MemoryError(f"need {need} blocks, {len(self.free)} free")
-        blocks = [self.free.pop() for _ in range(need)]
         bs = self.block_size
-        pad = need * bs - S
-        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        # (L, KV, need, bs, hd) -> per-block writes
-        kb = kp.reshape(L, KV, need, bs, hd).transpose(2, 0, 1, 3, 4)
-        vb = vp.reshape(L, KV, need, bs, hd).transpose(2, 0, 1, 3, 4)
-        idx = jnp.asarray(blocks)
-        self.k = self.k.at[:, idx].set(kb.transpose(1, 0, 2, 3, 4))
-        self.v = self.v.at[:, idx].set(vb.transpose(1, 0, 2, 3, 4))
-        self.tables[rid] = blocks
+        need = self.blocks_needed(S)
+        hit = PrefixHit()
+        shared: List[int] = []
+        if tokens is not None:
+            if len(tokens) != S:
+                raise ValueError(f"tokens length {len(tokens)} != KV "
+                                 f"sequence length {S}")
+            h: Optional[int] = None
+            i = 0
+            while i + bs <= S:
+                h = _chain_hash(h, tuple(tokens[i:i + bs]))
+                b = self.chain.get(h)
+                if b is None:
+                    break
+                shared.append(b)
+                i += bs
+            # acquire BEFORE allocating: a shared block must not be evicted
+            # by our own suffix allocation
+            for b in shared:
+                self._acquire(b)
+            hit.blocks, hit.n_tokens = list(shared), i
+        n_shared = len(shared)
+        try:
+            new_blocks = self._alloc(need - n_shared)
+        except MemoryError:
+            for b in shared:                    # undo the acquisition
+                self._release_block(b)
+            raise
+        if new_blocks:
+            lo = n_shared * bs
+            pad = need * bs - S
+            ks = jnp.pad(k[:, :, lo:], ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vs = jnp.pad(v[:, :, lo:], ((0, 0), (0, 0), (0, pad), (0, 0)))
+            n_new = len(new_blocks)
+            kb = ks.reshape(L, KV, n_new, bs, hd)
+            vb = vs.reshape(L, KV, n_new, bs, hd)
+            idx = jnp.asarray(new_blocks)
+            self.k = self.k.at[:, idx].set(kb.transpose(0, 2, 1, 3, 4))
+            self.v = self.v.at[:, idx].set(vb.transpose(0, 2, 1, 3, 4))
+            for b in new_blocks:
+                self.ref[b] = 1
+        table = shared + new_blocks
+        self.tables[rid] = table
         self.lengths[rid] = S
+        if tokens is not None:
+            self._register(table, tokens)
+            self.stats["blocks_shared"] += n_shared
+        return hit
+
+    def _register(self, table: List[int], tokens: Sequence[int]) -> None:
+        """Index a freshly-admitted table: chain hashes for full blocks,
+        tail registry for a trailing partial block."""
+        bs = self.block_size
+        S = len(tokens)
+        h: Optional[int] = None
+        for bi in range(S // bs):
+            h = _chain_hash(h, tuple(tokens[bi * bs:(bi + 1) * bs]))
+            b = table[bi]
+            if h not in self.chain:
+                self.chain[h] = b
+                self.block_hash[b] = h
+        rem = tuple(tokens[(S // bs) * bs:])
+        if rem:
+            tb = table[S // bs]
+            if tb not in self.tail_meta:
+                self.tail_meta[tb] = (h, rem)
+                self.tails.setdefault(h, []).append(tb)
+                # writing a private tail where a sibling tail already
+                # diverged is the admit-side copy-on-write fork
+                if len(self.tails[h]) > 1:
+                    self.stats["cow_forks"] += 1
 
     def append_token(self, rid: int, k: jax.Array, v: jax.Array) -> None:
-        """Append one token's KV. k/v: (L, KV, hd)."""
+        """Append one token's KV. k/v: (L, KV, hd).  Copy-on-write: if the
+        target block is shared with another table, fork a private copy
+        first so the sharer's bytes are never disturbed."""
         pos = self.lengths[rid]
         blocks = self.tables[rid]
         if pos >= len(blocks) * self.block_size:
-            if not self.free:
-                raise MemoryError("pool exhausted")
-            blocks.append(self.free.pop())
-        b = blocks[pos // self.block_size]
+            blocks.append(self._alloc(1)[0])
+            self.ref[blocks[-1]] = 1
+        bi = pos // self.block_size
+        b = blocks[bi]
+        if self.ref.get(b, 0) > 1:
+            nb = self._alloc(1)[0]
+            self.k = self.k.at[:, nb].set(self.k[:, b])
+            self.v = self.v.at[:, nb].set(self.v[:, b])
+            self.ref[b] -= 1
+            self.ref[nb] = 1
+            blocks[bi] = nb
+            b = nb
+            self.stats["cow_forks"] += 1
         off = pos % self.block_size
         self.k = self.k.at[:, b, :, off].set(k)
         self.v = self.v.at[:, b, :, off].set(v)
@@ -103,25 +326,75 @@ class PagedKVCache:
         need = self.blocks_needed(capacity_tokens) - len(blocks)
         if need <= 0:
             return
-        if len(self.free) < need:
+        if len(self.free) + len(self.cached) < need:
             raise MemoryError(f"need {need} blocks to reserve "
                               f"{capacity_tokens} tokens for rid {rid}, "
                               f"{len(self.free)} free")
-        for _ in range(need):
-            blocks.append(self.free.pop())
+        for b in self._alloc(need):
+            blocks.append(b)
+            self.ref[b] = 1
+
+    def _release_block(self, b: int) -> None:
+        self.ref[b] -= 1
+        if self.ref[b] > 0:
+            return
+        del self.ref[b]
+        if b in self.block_hash or b in self.tail_meta:
+            self.cached[b] = None          # park: data + hash stay live
+        else:
+            self.free.append(b)
 
     def release(self, rid: int) -> None:
-        self.free.extend(self.tables.pop(rid))
+        # children park after parents (reverse table order) so LRU eviction
+        # (oldest first) drops chain leaves before the prefixes they extend
+        for b in reversed(self.tables.pop(rid)):
+            self._release_block(b)
         self.lengths.pop(rid)
 
+    def drop_cache(self) -> None:
+        """Forget every cached prefix: parked blocks return to the blank
+        free list, the hash index and counters reset — the cross-run
+        determinism hook (engine.clear())."""
+        for b in self.cached:
+            self.free.append(b)
+        self.cached.clear()
+        self.chain.clear()
+        self.block_hash.clear()
+        self.tails.clear()
+        self.tail_meta.clear()
+        for key in self.stats:
+            self.stats[key] = 0
+
+    # ------------------------------------------------------------------
+    # accounting: physical occupancy, tail slack, and reserve headroom are
+    # three different questions — keep them separate (a freshly-reserved
+    # decode slot is headroom, not fragmentation)
     # ------------------------------------------------------------------
     def utilization(self) -> float:
-        used_tokens = sum(self.lengths.values())
-        return used_tokens / (self.n_blocks * self.block_size)
+        """Fraction of physical blocks held by live tables or the cached
+        prefix list (shared blocks count once — that is the point)."""
+        busy = self.n_blocks - len(self.free) - len(self.cached)
+        return busy / self.n_blocks
+
+    def written_tokens(self) -> int:
+        """Token positions actually written across live tables (per-table:
+        a block shared by two tables holds tokens for both)."""
+        return sum(self.lengths.values())
+
+    def reserved_tokens(self) -> int:
+        """Capacity held by reserve() headroom beyond each sequence's
+        written blocks — allocated-on-purpose, NOT fragmentation."""
+        bs = self.block_size
+        return sum((len(t) - self.blocks_needed(self.lengths[rid])) * bs
+                   for rid, t in self.tables.items())
 
     def fragmentation(self) -> float:
-        """Internal fragmentation: allocated-but-unused slots / allocated."""
-        alloc = sum(len(b) for b in self.tables.values()) * self.block_size
-        if alloc == 0:
+        """True internal fragmentation: unusable slack inside each
+        sequence's written blocks (the partial last block), over the blocks
+        the written tokens occupy.  reserve()d headroom is excluded — see
+        `reserved_tokens` for that."""
+        bs = self.block_size
+        denom = sum(self.blocks_needed(n) for n in self.lengths.values()) * bs
+        if denom == 0:
             return 0.0
-        return 1.0 - sum(self.lengths.values()) / alloc
+        return 1.0 - sum(self.lengths.values()) / denom

@@ -126,6 +126,64 @@ def test_chat_multiturn_sessions_grow_context():
         assert all(b >= a for a, b in zip(inputs, inputs[1:]))
 
 
+def test_chat_multiturn_long_classification_matches_threshold():
+    """Regression for the is_long bug: multi-turn contexts cross the 2K
+    short/long boundary and MUST be classified long — the seed-0 default
+    trace carries 533 such turns (max input 11,234 tokens), every one of
+    which the old hardcoded `is_long=False` routed down the short path.
+    Classification must agree with the threshold everywhere, and the
+    threshold must be an overridable kwarg."""
+    reqs = get_scenario("chat_multiturn", n_requests=2000, seed=0)
+    longs = [r for r in reqs if r.is_long]
+    assert len(longs) == 533
+    assert max(r.input_len for r in reqs) == 11_234
+    for r in reqs:
+        assert r.is_long == (r.input_len >= 2048)
+    # the boundary is a kwarg, not a constant
+    hi = get_scenario("chat_multiturn", n_requests=2000, seed=0,
+                      long_threshold=4096)
+    assert sum(r.is_long for r in hi) < len(longs)
+    for r in hi:
+        assert r.is_long == (r.input_len >= 4096)
+
+
+def test_chat_multiturn_prefix_fields_chain_turns():
+    """Each turn's reusable prefix is exactly the previous turn's
+    input+output (the session context), block-reuse's ground truth."""
+    reqs = get_scenario("chat_multiturn", n_requests=2000, seed=0)
+    sessions = {}
+    for r in reqs:
+        sessions.setdefault(r.session, []).append(r)
+    for turns in sessions.values():
+        turns.sort(key=lambda r: r.arrival)
+        assert turns[0].prefix_len == 0
+        for prev, cur in zip(turns, turns[1:]):
+            assert cur.prefix_group == cur.session
+            if cur.prefix_len:            # untruncated: context chains
+                assert cur.prefix_len == prev.input_len + prev.output_len
+                assert cur.prefix_len == prev.prefix_write
+                assert cur.prefix_len <= cur.input_len
+
+
+def test_shared_prefix_groups_and_classification():
+    """shared_prefix tags every request with its system-prompt group; the
+    shared prefix is the system prompt only (strictly shorter than the
+    input), and is_long agrees with the 2K threshold."""
+    reqs = get_scenario("shared_prefix", n_requests=1000, seed=0)
+    assert {r.prefix_group for r in reqs} == set(range(8))
+    by_group = {}
+    for r in reqs:
+        assert 0 < r.prefix_len < r.input_len
+        assert r.is_long == (r.input_len >= 2048)
+        by_group.setdefault(r.prefix_group, set()).add(r.prefix_len)
+    # one fixed system prompt per group -> one prefix length per group
+    assert all(len(v) == 1 for v in by_group.values())
+    # Zipf popularity: group 0 dominates
+    counts = {g: sum(1 for r in reqs if r.prefix_group == g)
+              for g in by_group}
+    assert counts[0] == max(counts.values())
+
+
 def test_scenarios_replay_through_simulator():
     """Every named scenario runs end-to-end under FIFO with conservation."""
     cc, em = paper_cluster("mistral_7b")
