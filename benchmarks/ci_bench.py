@@ -71,6 +71,11 @@ SIM_CASES = (
     # PecSched path — gated so the cache machinery stays O(1) per decision
     ("pecsched_cache_multiturn_10k", "pecsched/cache", "chat_multiturn",
      10_000),
+    # plan-ahead SLO scheduling on the tiered bursty mix: every arrival
+    # dirties the plan and every dispatch may replan (sort + fluid placement
+    # of the whole short queue) — gated so planning stays O(queue log queue)
+    # amortized, not O(n) replans of an ever-growing backlog
+    ("pecsched_slo_tiered_10k", "pecsched/slo", "slo_tiered", 10_000),
 )
 
 #: reduced scale_sweep case: generated trace + streaming metrics on a

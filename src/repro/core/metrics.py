@@ -62,6 +62,16 @@ class _Buf:
         return self._a[:self.n]
 
 
+def _mean_sorted(values: np.ndarray) -> Optional[float]:
+    """Order-canonical mean: summing the sorted array makes the result a
+    function of the value *multiset* only, so the streaming path (completion
+    order) and the retained path (arrival order) produce byte-identical
+    means instead of agreeing to ulps."""
+    if not len(values):
+        return None
+    return float(np.sort(values).sum() / len(values))
+
+
 class MetricsAccumulator:
     """Streaming summary state: per-request statistics fold into typed
     buffers at completion time, so `summarize` never needs the retained
@@ -87,6 +97,21 @@ class MetricsAccumulator:
         self.min_short_arrival = math.inf
         self.max_short_finish = -math.inf
         self.tenants: Dict[str, Dict] = {}
+        # --- SLO / goodput state (PecSched SLO extension) ---
+        self.ttft = _Buf()                  # completed, first token served
+        self.tpot = _Buf()                  # completed, >= 1 decode step
+        self.min_arrival = math.inf         # all requests (goodput span)
+        self.max_finish = -math.inf         # all completions (goodput span)
+        self.good_done = 0                  # completions honouring their SLO
+        self.shed = 0                       # requests dropped by the policy
+        self.tiers: Dict[str, Dict] = {}    # tier -> n/completed/shed/attained
+
+    def _tier(self, name: str) -> Dict:
+        t = self.tiers.get(name)
+        if t is None:
+            t = self.tiers[name] = {"n": 0, "completed": 0, "shed": 0,
+                                    "attained": 0}
+        return t
 
     def _tenant(self, name: str) -> Dict:
         t = self.tenants.get(name)
@@ -104,6 +129,10 @@ class MetricsAccumulator:
             self.n_short += 1
             if req.arrival < self.min_short_arrival:
                 self.min_short_arrival = req.arrival
+        if req.arrival < self.min_arrival:
+            self.min_arrival = req.arrival
+        if req.slo is not None:
+            self._tier(req.slo)["n"] += 1
         if req.tenant is not None:
             t = self._tenant(req.tenant)
             t["n"] += 1
@@ -135,6 +164,26 @@ class MetricsAccumulator:
                 self.short_slow.add(slow)
             if req.finish is not None and req.finish > self.max_short_finish:
                 self.max_short_finish = req.finish
+        ttft = req.ttft
+        if ttft is not None:
+            self.ttft.add(ttft)
+        if req.finish is not None and req.first_token is not None:
+            self.tpot.add(req.tpot)
+        if req.finish is not None and req.finish > self.max_finish:
+            self.max_finish = req.finish
+        completed = req.phase == Phase.DONE and req.finish is not None
+        if completed and req.slo_met() is not False:
+            self.good_done += 1
+        if req.shed:
+            self.shed += 1
+        if req.slo is not None:
+            tier = self._tier(req.slo)
+            if completed:
+                tier["completed"] += 1
+                if req.slo_met():
+                    tier["attained"] += 1
+            if req.shed:
+                tier["shed"] += 1
         if req.tenant is not None:
             t = self._tenant(req.tenant)
             qd = req.queueing_delay
@@ -178,6 +227,16 @@ def _summarize_streaming(policy, acc: MetricsAccumulator,
     else:
         short_rps = 0.0
     long_jct = acc.long_jct.view()
+    # TTFT over everything served so far: completed from the buffer, plus
+    # pending requests whose first token already landed (mirrors qd above)
+    ttft = acc.ttft.view()
+    pend_ttft = [r.ttft for r in pend if r.ttft is not None]
+    if pend_ttft:
+        ttft = np.concatenate([ttft, np.asarray(pend_ttft,
+                                                dtype=np.float64)])
+    tpot = acc.tpot.view()
+    span = acc.max_finish - acc.min_arrival
+    goodput = acc.good_done / max(span, 1e-9) if acc.good_done else 0.0
     out = {
         "policy": policy.name,
         "t_end": float(t_end),
@@ -185,29 +244,41 @@ def _summarize_streaming(policy, acc: MetricsAccumulator,
         "short_completed": acc.short_done,
         "long_completed": acc.long_done,
         "short_qd_pct": _pct_dict(qd),
-        "short_qd_mean": float(qd.mean()) if len(qd) else None,
+        "short_qd_mean": _mean_sorted(qd),
         "short_rps": short_rps,
-        "long_jct_mean": (float(np.mean(long_jct))
+        "long_jct_mean": (_mean_sorted(long_jct)
                           if acc.long_done else None),
         "long_jct_p99": (float(np.percentile(long_jct, 99))
                          if acc.long_done else None),
+        "ttft_mean": _mean_sorted(ttft),
+        "ttft_pct": _pct_dict(ttft),
+        "tpot_mean": _mean_sorted(tpot),
+        "tpot_pct": _pct_dict(tpot),
+        "goodput": goodput,
+        "slo_shed": acc.shed,
         "short_slowdown_pct": _pct_dict(short_slow),
-        "short_slowdown_mean": (float(short_slow.mean())
-                                if len(short_slow) else None),
-        "long_slowdown_mean": (float(long_slow.mean())
-                               if len(long_slow) else None),
+        "short_slowdown_mean": _mean_sorted(short_slow),
+        "long_slowdown_mean": _mean_sorted(long_slow),
         "long_starved_frac": (n_starved / acc.n_long
                               if acc.n_long else 0.0),
         "preemptions": int(getattr(policy, "preemption_events", 0)),
         "decode_preemptions": int(
             getattr(policy, "decode_preemption_events", 0)),
         "gpu_idle_rate": _idle_rate(policy, t_end),
+        "busy_overflow_s": 0.0,     # refined by _role_breakdown below
         "role_flips": len(getattr(policy, "role_log", ())),
     }
     out.update(_prefix_cache_fields(policy))
     roles = _role_breakdown(policy, t_end)
     if roles is not None:
         out.update(roles)
+    if acc.tiers:
+        out["slo_tiers"] = {
+            tier: {"n": t["n"], "completed": t["completed"],
+                   "shed": t["shed"], "attained": t["attained"],
+                   "attainment": (t["attained"] / t["n"]
+                                  if t["n"] else 0.0)}
+            for tier, t in sorted(acc.tiers.items())}
     if acc.tenants:
         pend_tenant_qd: Dict[str, List[float]] = {}
         for r in pend:
@@ -226,11 +297,11 @@ def _summarize_streaming(policy, acc: MetricsAccumulator,
             per_tenant[tenant] = {
                 "n": t["n"],
                 "completed": t["completed"],
-                "qd_mean": float(tqd.mean()) if len(tqd) else None,
+                "qd_mean": _mean_sorted(tqd),
                 "qd_pct": _pct_dict(tqd),
                 "rps": (t["completed"] / max(span, 1e-9)
                         if t["completed"] else 0.0),
-                "jct_mean": (float(np.mean(t["jct"].view()))
+                "jct_mean": (_mean_sorted(t["jct"].view())
                              if t["completed"] else None),
             }
         out["per_tenant"] = per_tenant
@@ -252,6 +323,20 @@ def summarize(policy, t_end: float) -> Dict:
                    if r.queueing_delay is not None])
     short_slow = _slowdowns(policy, short_done)
     long_slow = _slowdowns(policy, long_done)
+    # TTFT spans completed AND pending-but-served requests (like qd above);
+    # TPOT needs a finish time, so it is completion-only
+    ttft = np.array([r.ttft for r in reqs if r.ttft is not None])
+    tpot = np.array([r.tpot for r in reqs
+                     if r.finish is not None and r.first_token is not None])
+    completed = [r for r in reqs
+                 if r.phase == Phase.DONE and r.finish is not None]
+    # goodput: completions that honoured their SLO tier contract (untiered
+    # requests count as trivially satisfied) per second of workload span
+    n_good = sum(1 for r in completed if r.slo_met() is not False)
+    finished = [r.finish for r in reqs if r.finish is not None]
+    span = (max(finished) - min(r.arrival for r in reqs)
+            if finished and reqs else 0.0)
+    goodput = n_good / max(span, 1e-9) if n_good else 0.0
     out = {
         "policy": policy.name,
         "t_end": float(t_end),
@@ -260,23 +345,30 @@ def summarize(policy, t_end: float) -> Dict:
         "long_completed": len(long_done),
         # paper Fig 2/3/9/12: percentile queueing delays of short requests
         "short_qd_pct": _pct_dict(qd),
-        "short_qd_mean": float(qd.mean()) if len(qd) else None,
+        "short_qd_mean": _mean_sorted(qd),
         # paper Fig 10/13: short throughput (RPS over the shorts' span —
         # first arrival to last short completion; long-drain tail excluded)
         "short_rps": _short_rps(shorts, short_done),
         # paper Fig 11/14: average JCT of long requests
-        "long_jct_mean": (float(np.mean([r.jct for r in long_done]))
+        "long_jct_mean": (_mean_sorted(np.array([r.jct for r in long_done]))
                           if long_done else None),
         "long_jct_p99": (float(np.percentile([r.jct for r in long_done], 99))
                          if long_done else None),
+        # SLO extension: time-to-first-token / time-per-output-token, plus
+        # goodput — completions weighted by SLO satisfaction per second —
+        # and how many requests the policy deliberately shed
+        "ttft_mean": _mean_sorted(ttft),
+        "ttft_pct": _pct_dict(ttft),
+        "tpot_mean": _mean_sorted(tpot),
+        "tpot_pct": _pct_dict(tpot),
+        "goodput": goodput,
+        "slo_shed": sum(1 for r in reqs if r.shed),
         # normalized slowdown = JCT / ideal unloaded service time (cost-model
         # ideal: dedicated replicas, zero queueing) — the tail-aware metric
         # that makes 7B and 70B clusters comparable on one axis
         "short_slowdown_pct": _pct_dict(short_slow),
-        "short_slowdown_mean": (float(short_slow.mean())
-                                if len(short_slow) else None),
-        "long_slowdown_mean": (float(long_slow.mean())
-                               if len(long_slow) else None),
+        "short_slowdown_mean": _mean_sorted(short_slow),
+        "long_slowdown_mean": _mean_sorted(long_slow),
         # paper Table 2: starvation of longs — a long is starved if it never
         # began service while requests were still arriving (the post-trace
         # drain phase would not exist in continuous operation)
@@ -292,6 +384,11 @@ def summarize(policy, t_end: float) -> Dict:
             getattr(policy, "decode_preemption_events", 0)),
         # paper Table 1: GPU idle rate (Eq. 1)
         "gpu_idle_rate": _idle_rate(policy, t_end),
+        # busy-time accounted beyond the occupancy actually available — a
+        # non-zero value means double-counted add_busy / broken accounting
+        # that the idle-rate and utilization clamps would otherwise swallow
+        # silently (refined by _role_breakdown below)
+        "busy_overflow_s": 0.0,
         # §5.2 coordination: replica role flips performed by the coordinator
         # (0 for every static policy)
         "role_flips": len(getattr(policy, "role_log", ())),
@@ -303,10 +400,38 @@ def summarize(policy, t_end: float) -> Dict:
     roles = _role_breakdown(policy, t_end)
     if roles is not None:
         out.update(roles)
+    slo_tiers = _slo_tiers(reqs)
+    if slo_tiers is not None:
+        out["slo_tiers"] = slo_tiers
     per_tenant = _per_tenant(shorts + longs)
     if per_tenant is not None:
         out["per_tenant"] = per_tenant
     return out
+
+
+def _slo_tiers(reqs: List[Request]) -> Optional[Dict[str, Dict]]:
+    """Per-tier SLO accounting for tiered workloads (slo_tiered scenario);
+    None when no request carries a tier, keeping untiered summaries
+    unchanged.  `attainment` is attained over *arrived* (not completed) —
+    shed and unfinished requests are honest misses."""
+    tiers: Dict[str, Dict] = {}
+    for r in reqs:
+        if r.slo is None:
+            continue
+        t = tiers.setdefault(r.slo, {"n": 0, "completed": 0, "shed": 0,
+                                     "attained": 0})
+        t["n"] += 1
+        if r.phase == Phase.DONE and r.finish is not None:
+            t["completed"] += 1
+            if r.slo_met():
+                t["attained"] += 1
+        if r.shed:
+            t["shed"] += 1
+    if not tiers:
+        return None
+    return {tier: {**t, "attainment": (t["attained"] / t["n"]
+                                       if t["n"] else 0.0)}
+            for tier, t in sorted(tiers.items())}
 
 
 def _prefix_cache_fields(policy) -> Dict:
@@ -334,7 +459,17 @@ def _role_breakdown(policy, t_end: float) -> Optional[Dict]:
     together they show WHERE the coordinator moved capacity and whether
     the moved capacity was actually used.  `role_timeline` (the flip log,
     [t, rid, old, new] rows) appears only when flips occurred, keeping
-    static-policy summaries small."""
+    static-policy summaries small.
+
+    Utilization is capped at 1.0 for display, but the cap is NOT silent:
+    `busy_overflow_s` totals the busy-seconds accounted beyond each role's
+    actual occupancy, so a double-counted `add_busy` (or any broken busy
+    accounting) surfaces as a non-zero overflow instead of vanishing into
+    the clamp (tests/test_metrics.py pins this).  The decode pool is the
+    one deliberate exception: `short_decode` replicas run CONCURRENT
+    decode rounds (lane-seconds, not wall-seconds), so that role's busy
+    legitimately exceeds occupancy and is excluded — a healthy run reports
+    overflow 0.0."""
     replicas = getattr(policy, "replicas", None)
     if not replicas or t_end <= 0 or not hasattr(replicas[0], "role_occupancy"):
         return None
@@ -346,7 +481,11 @@ def _role_breakdown(policy, t_end: float) -> Optional[Dict]:
         for role, secs in r.busy_by_role.items():
             busy[role] = busy.get(role, 0.0) + secs
     total = t_end * len(replicas)
+    overflow = sum(max(busy.get(role, 0.0) - occ.get(role, 0.0), 0.0)
+                   for role in set(busy) | set(occ)
+                   if role != "short_decode")
     out: Dict = {
+        "busy_overflow_s": overflow,
         "role_occupancy": {role: secs / total
                            for role, secs in sorted(occ.items())},
         "role_utilization": {role: min(busy.get(role, 0.0) / secs, 1.0)
@@ -374,6 +513,10 @@ def _idle_rate(policy, t_end: float) -> float:
         return 0.0
     total_busy = sum(r.busy_time for r in replicas)
     total = t_end * len(replicas)
+    # floored at 0 for display; over-counted busy-time (negative idle) is
+    # surfaced via `busy_overflow_s` rather than silently swallowed —
+    # per-role overflow is a superset of this aggregate (busy_by_role sums
+    # to busy_time, occupancy sums to t_end per replica)
     return max(0.0, 1.0 - total_busy / total)
 
 
@@ -424,10 +567,10 @@ def _per_tenant(reqs: List[Request]) -> Optional[Dict[str, Dict]]:
         out[tenant] = {
             "n": len(rs),
             "completed": len(done),
-            "qd_mean": float(qd.mean()) if len(qd) else None,
+            "qd_mean": _mean_sorted(qd),
             "qd_pct": _pct_dict(qd),
             "rps": len(done) / max(span, 1e-9) if done else 0.0,
-            "jct_mean": (float(np.mean([r.jct for r in done]))
+            "jct_mean": (_mean_sorted(np.array([r.jct for r in done]))
                          if done else None),
         }
     return out
@@ -457,7 +600,9 @@ AGGREGATE_KEYS = ("short_qd_mean", "short_rps", "long_jct_mean",
                   "long_starved_frac", "preemptions", "gpu_idle_rate",
                   "short_slowdown_mean", "long_slowdown_mean",
                   "decode_preemptions", "role_flips",
-                  "prefix_hit_rate", "prefill_flops_saved")
+                  "prefix_hit_rate", "prefill_flops_saved",
+                  "ttft_mean", "tpot_mean", "goodput", "slo_shed",
+                  "busy_overflow_s")
 
 
 def aggregate_seeds(summaries: Iterable[Dict],
@@ -467,7 +612,8 @@ def aggregate_seeds(summaries: Iterable[Dict],
     summaries = list(summaries)
     out: Dict[str, Dict] = {k: ci95([s.get(k) for s in summaries])
                             for k in keys}
-    for field in ("short_qd_pct", "short_slowdown_pct"):
+    for field in ("short_qd_pct", "short_slowdown_pct", "ttft_pct",
+                  "tpot_pct"):
         if any(field in s for s in summaries):
             out[field] = {str(p): ci95([s.get(field, {}).get(str(p))
                                         for s in summaries])

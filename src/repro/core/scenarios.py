@@ -17,6 +17,8 @@ across every regime with `get_scenario(name)`:
     diurnal         sinusoidal day/night arrival rate (compressed period)
     multi_tenant    superposed per-tenant streams (chat / summarize /
                     codegen) with distinct rate and length mixes
+    slo_tiered      the multi_tenant mix under MMPP bursts with per-tier
+                    TTFT/TPOT SLO contracts (interactive/standard/batch)
     chat_multiturn  session-correlated follow-ups: each turn's input carries
                     the accumulated conversation context
     shared_prefix   many users, few shared system prompts, bursty arrivals —
@@ -179,6 +181,65 @@ def multi_tenant(n_requests: int, seed: int, *, arrival_rps: float = 10.0,
     # END (latest arrivals), not whichever tenant happens to sit last
     out.sort(key=lambda r: r.arrival)
     return out[:n_requests]
+
+
+# ---------------------------------------------------------------------------
+# SLO-tiered: the multi_tenant mix under bursty (MMPP) arrivals, with every
+# request carrying a per-tier TTFT/TPOT contract.  Tiers are assigned via a
+# tenant -> tier map (chat is interactive, codegen standard, summarize
+# batch); targets are multiples of a single `slo_scale` knob so one override
+# retunes the whole contract set for compressed (engine) timelines the same
+# way `mean_cycle` retunes the burst clock.
+# ---------------------------------------------------------------------------
+DEFAULT_TIER_MAP: Dict[str, str] = {
+    "chat": "interactive",
+    "codegen": "standard",
+    "summarize": "batch",
+}
+
+#: per-tier (ttft_mult, tpot_mult) applied to `slo_scale`; None = no bound
+#: on that term.  batch has no TTFT contract — its longs legitimately spend
+#: minutes in prefill — so its promise is completion at a sane decode
+#: cadence (and not being shed).
+DEFAULT_SLO_TIERS: Dict[str, tuple] = {
+    "interactive": (1.0, 0.05),
+    "standard": (4.0, 0.20),
+    "batch": (None, 2.0),
+}
+
+
+def assign_slo_tiers(reqs: List[Request], *, slo_scale: float = 1.0,
+                     tier_map: Dict[str, str] = DEFAULT_TIER_MAP,
+                     tiers: Dict[str, tuple] = DEFAULT_SLO_TIERS,
+                     default_tier: str = "standard") -> List[Request]:
+    """Stamp `slo`/`ttft_target`/`tpot_target` onto `reqs` in place (and
+    return them) from the tenant -> tier map.  Exposed so tests and other
+    scenarios can tier arbitrary traces."""
+    for r in reqs:
+        tier = tier_map.get(r.tenant or "", default_tier)
+        ttft_mult, tpot_mult = tiers[tier]
+        r.slo = tier
+        r.ttft_target = None if ttft_mult is None else ttft_mult * slo_scale
+        r.tpot_target = None if tpot_mult is None else tpot_mult * slo_scale
+    return reqs
+
+
+@register_scenario("slo_tiered",
+                   "multi-tenant mix with per-tier TTFT/TPOT SLOs under "
+                   "bursty (MMPP) arrivals")
+def slo_tiered(n_requests: int, seed: int, *, arrival_rps: float = 10.0,
+               tenants: Dict[str, dict] = DEFAULT_TENANTS,
+               tier_map: Dict[str, str] = DEFAULT_TIER_MAP,
+               slo_scale: float = 1.0,
+               burst_factor: float = 8.0, burst_frac: float = 0.15,
+               mean_cycle: float = 60.0, **overrides) -> List[Request]:
+    reqs = multi_tenant(n_requests, seed, arrival_rps=arrival_rps,
+                        tenants=tenants, arrival_process="mmpp",
+                        arrival_params=(("burst_factor", burst_factor),
+                                        ("burst_frac", burst_frac),
+                                        ("mean_cycle", mean_cycle)),
+                        **overrides)
+    return assign_slo_tiers(reqs, slo_scale=slo_scale, tier_map=tier_map)
 
 
 # ---------------------------------------------------------------------------

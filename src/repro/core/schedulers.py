@@ -23,6 +23,10 @@ PecSchedPolicy      §5 (full system)        Figs.9-11 (overall), Table 6/7
   /cache_greedy     prefix caching): cache- claim cells (chat_multiturn,
                     affinity routing +      shared_prefix) + the greedy
                     discounted prefill      affinity-vs-balance ablation
+PecSchedSLOPolicy   beyond-paper (TetriSched slo_* claim cells (slo_tiered):
+ pecsched/slo       -style plan-ahead):     goodput + per-tier attainment
+                    slack order, shed,      under MMPP bursts
+                    long-claim retraction
 PredSJFPolicy       beyond-paper (ELIS /    prediction-robustness sweep
  sjf_pred[:pred]    Beyond-Prediction):     (EXPERIMENTS.md §Prediction-
  tail_aware[:pred]  predicted-SJF + decode- robustness) + pred_* claims
@@ -46,6 +50,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 from collections import deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional
@@ -277,6 +282,23 @@ class FIFOPolicy(BasePolicy):
 
     def on_done(self, t, work):
         self._release(work)
+        # monolithic work (prefill + decode in one Work): reconstruct the
+        # first-token time from the memoized decode price so TTFT is defined
+        # for the baselines too — same expressions `_run_short_batch` /
+        # `_run_long` priced the work with, so first_token >= prefill_start
+        # holds on the analytic clock of either backend
+        if work.kind == "long_full":
+            for r in work.requests:
+                r.first_token = t - self.em.decode_time(
+                    r.output_len, r.input_len, batch=1)
+        else:
+            reqs = work.requests
+            tokens = sum(r.input_len for r in reqs)
+            max_out = max(r.output_len for r in reqs)
+            dec = self.em.decode_time(max_out, tokens // len(reqs),
+                                      batch=len(reqs))
+            for r in reqs:
+                r.first_token = t - dec
         for r in work.requests:
             r.phase = Phase.DONE
             r.finish = t
@@ -533,23 +555,28 @@ class PecSchedPolicy(BasePolicy):
     def on_done(self, t, work):
         if work.kind == "short_prefill":
             self._release(work)
-            for r in work.requests:
-                r.first_token = t
             if self.disagg and self._decode_pool_active():
                 # KV streams to the decode replica DURING prefill (overlapped,
                 # §5.2) — only a negligible tail remains at completion.
+                # first_token is deliberately NOT stamped here: a migrating
+                # short serves its first token only when decode work lands on
+                # the pool (_drain_decode_queue), which is also the moment
+                # real engines admit the parked KV and can emit — so TTFT
+                # means the same thing on SimBackend and EngineBackend.
                 for r in work.requests:
                     r.phase = Phase.MIGRATING
                     self.decode_queue.append(r)
                 self._drain_decode_queue(t)
             else:
-                # /Dis: decode continues on the same replicas (holds them)
+                # /Dis: decode continues on the same replicas (holds them) —
+                # the first token really is served at prefill completion
                 tokens = sum(r.input_len for r in work.requests)
                 max_out = max(r.output_len for r in work.requests)
                 d = self.em.decode_time(
                     max_out, tokens // len(work.requests),
                     batch=len(work.requests))
                 for r in work.requests:
+                    r.first_token = t
                     r.phase = Phase.DECODE
                 self._start(t, "short_decode_inplace", work.requests,
                             work.replica_ids, d)
@@ -566,14 +593,15 @@ class PecSchedPolicy(BasePolicy):
             self._drain_decode_queue(t)
         elif work.kind == "short_prefill_coloc":
             self._release(work)
-            for r in work.requests:
-                r.first_token = t
             if self.disagg and self._decode_pool_active():
+                # migrating: first_token stamps when decode lands (see above)
                 for r in work.requests:
                     r.phase = Phase.MIGRATING
                     self.decode_queue.append(r)
                 self._drain_decode_queue(t)
             else:
+                for r in work.requests:
+                    r.first_token = t
                 self.backend.decode_inline(work)
                 self._finish_requests(t, work.requests, decode_inline_at=t)
         elif work.kind == "long_prefill":
@@ -646,6 +674,11 @@ class PecSchedPolicy(BasePolicy):
             avg_in = sum(r.input_len for r in batch) // len(batch)
             d = self.em.decode_time(max_out, avg_in, batch=len(batch))
             for r in batch:
+                # first token serves NOW: the migration has landed and the
+                # decode batch starts — the backend-consistent TTFT stamp
+                # for the migrating-short path
+                if r.first_token is None:
+                    r.first_token = t
                 r.phase = Phase.DECODE
             rep.decode_load += len(batch)
             w = Work(wid=next(self._wid), kind="short_decode",
@@ -1101,6 +1134,146 @@ class PecSchedCachePolicy(PecSchedPolicy):
 
 
 # ===========================================================================
+# SLO-aware plan-ahead PecSched (beyond-paper: TetriSched-style planning).
+# Same execution machinery as PecSched; what changes is WHEN work runs —
+# the short backlog is slack-ordered against per-tier TTFT contracts and
+# placed into a discretized future window before any replica is touched.
+# ===========================================================================
+class PecSchedSLOPolicy(PecSchedPolicy):
+    """PecSched + plan-ahead scheduling against per-request SLO tiers.
+
+    Three behaviours layer on the base policy, all decided policy-side (so
+    both backends replay identical decision logs):
+
+    * **slack ordering** — `_replan` re-sorts the short backlog earliest-
+      deadline-first (deadline = arrival + TTFT target; untiered requests
+      sort last by arrival, so untiered traces degrade exactly to base
+      FIFO order).
+    * **plan-ahead window** — the backlog is placed into a discretized
+      future window (`plan_slots` slots, each one full-batch prefill wide
+      at cost-model prices).  The placement is fluid: aggregate prefill
+      rate = number of prefill-capable replicas, planned start = queued
+      work ahead / rate.  A batch-tier request whose planned *start* falls
+      beyond the window means every slot is already spoken for — the
+      cluster is provably oversubscribed — and it is shed (``Request.shed``,
+      terminal STARVED, logged as ``("shed", rid, t)``) instead of rotting
+      in the queue and dragging attainment for work that could still meet
+      its contract.
+    * **retraction** — when a contracted request's planned completion
+      busts its deadline, the plan is *urgent*: `_dispatch_longs` retracts
+      planned-but-unstarted long claims (claims hold replicas idle while
+      the gang drains) and admits no new longs until the burst clears,
+      logged as ``("retract", long_rid, t)``.  Started longs are never
+      retracted — preemption (inherited) already handles those.
+    """
+    name = "pecsched/slo"
+
+    def __init__(self, cc, em, *, plan_slots: int = 8,
+                 urgent_slack_slots: float = 1.0, **kw):
+        super().__init__(cc, em, **kw)
+        self.name = "pecsched/slo"
+        #: slot width = one full-batch local prefill at cost-model prices —
+        #: derived, so one config spans the 32-GPU sim cluster and the
+        #: CPU-engine cluster without retuning
+        self.slot_width = em.prefill_time(cc.max_batch_tokens, 1,
+                                          sp_mode="local")
+        self.plan_slots = plan_slots
+        self.urgent_slack = urgent_slack_slots * self.slot_width
+        self._est: Dict[int, float] = {}      # rid -> prefill estimate (s)
+        self._plan_dirty = True
+        self._plan_t = -math.inf
+        self._urgent = False
+        self.shed_events = 0
+        self.plan_retractions = 0
+
+    # ------------------------------------------------------------------
+    def on_arrival(self, t, req):
+        super().on_arrival(t, req)
+        self._plan_dirty = True
+
+    @staticmethod
+    def _deadline(r: Request) -> float:
+        return (r.arrival + r.ttft_target
+                if r.ttft_target is not None else math.inf)
+
+    def _service_est(self, r: Request) -> float:
+        e = self._est.get(r.rid)
+        if e is None:
+            e = self._est[r.rid] = self.em.prefill_time(r.input_len, 1,
+                                                        sp_mode="local")
+        return e
+
+    def _replan(self, t):
+        """Rebuild the plan: slack-order the backlog, place it into the
+        window, shed what provably cannot fit, flag urgency.  Gated on new
+        arrivals (`_plan_dirty`) or plan age ≥ one slot — between those,
+        the previous plan's order still holds."""
+        if not (self._plan_dirty or t - self._plan_t >= self.slot_width):
+            return
+        self._plan_dirty = False
+        self._plan_t = t
+        self._urgent = False
+        if not self.short_queue:
+            return
+        idx = self.index
+        rate = max(len(idx.by_role["general"]) + len(idx.by_role["prefill"]),
+                   1)
+        window = self.plan_slots * self.slot_width
+        keep: deque = deque()
+        shed: List[Request] = []
+        offset = 0.0                    # queued prefill seconds ahead
+        for r in sorted(self.short_queue,
+                        key=lambda r: (self._deadline(r), r.arrival, r.rid)):
+            need = self._service_est(r)
+            start = offset / rate       # fluid start within the window
+            if start > window and r.slo == "batch":
+                shed.append(r)
+                continue
+            deadline = self._deadline(r)
+            if (deadline < math.inf
+                    and t + start + need + self.urgent_slack > deadline):
+                self._urgent = True
+            offset += need
+            keep.append(r)
+        self.short_queue = keep
+        self.short_queue_tokens = sum(r.input_len for r in keep)
+        for r in shed:
+            r.shed = True
+            r.phase = Phase.STARVED
+            self.shed_events += 1
+            self._est.pop(r.rid, None)
+            if self.record_decisions:
+                self.decision_log.append(("shed", r.rid, t))
+            self._complete_request(r)
+
+    # ------------------------------------------------------------------
+    def dispatch(self, t):
+        if not self.short_queue:
+            # urgency exists only on behalf of queued short work; without a
+            # replan tick this would otherwise block longs forever
+            self._urgent = False
+        self._replan(t)
+        super().dispatch(t)
+
+    def _dispatch_longs(self, t):
+        if self._urgent:
+            # A contracted short misses its TTFT deadline under the current
+            # plan: claimed replicas sit idle waiting for a long gang to
+            # assemble — retract those placements and stop admitting longs
+            # until the plan clears.  Claims belong to still-queued longs
+            # only (popped at start), so nothing running is disturbed.
+            idx = self.index
+            for long_rid in sorted(idx.claims):
+                for i in sorted(idx.claims.get(long_rid, ())):
+                    self.replicas[i].claimed_by = None
+                self.plan_retractions += 1
+                if self.record_decisions:
+                    self.decision_log.append(("retract", long_rid, t))
+            return
+        super()._dispatch_longs(t)
+
+
+# ===========================================================================
 # Prediction-aware scheduling (beyond-paper: ELIS / Beyond-Prediction).
 # Keys decisions off *predicted* output length — PecSched's observable-input
 # counterpoint — with decode-lane preemption when the prediction was short.
@@ -1217,16 +1390,22 @@ class PredSJFPolicy(BasePolicy):
         self._release(work)
         if work.kind == "long_full":
             for r in work.requests:
+                # monolithic long: reconstruct first-token time from the
+                # memoized decode price (same expression _dispatch_prefill
+                # used), as in FIFOPolicy.on_done
+                r.first_token = t - self.em.decode_time(
+                    r.output_len, r.input_len, batch=1)
                 r.phase = Phase.DONE
                 r.finish = t
                 self._complete_request(r)
                 self.predictor.observe(r, r.output_len)
                 self._forget(r.rid)
             return
-        # short_prefill: first token is out; hand off to a decode lane with
-        # the predicted remaining budget (everything after the prefill token)
+        # short_prefill done: hand off to a decode lane with the predicted
+        # remaining budget.  first_token stamps when the first decode round
+        # actually starts (_start_decode_round) — the KV has migrated to the
+        # lane by then, so TTFT is backend-consistent here too.
         for r in work.requests:
-            r.first_token = t
             r.phase = Phase.MIGRATING
             self._dstate[r.rid] = [
                 1,                                          # tokens done
@@ -1253,6 +1432,8 @@ class PredSJFPolicy(BasePolicy):
                 self.decision_log.append(("pred_readmit", req.rid, t))
         rep.decode_load += 1
         self._lane_free -= 1
+        if req.first_token is None:     # first round: first token serves now
+            req.first_token = t
         req.phase = Phase.DECODE
         w = Work(wid=next(self._wid), kind="pred_decode",
                  replica_ids=[rep.rid], requests=[req], start=t, duration=d,
@@ -1401,7 +1582,7 @@ class TailAwarePolicy(PredSJFPolicy):
 POLICY_NAMES = ("fifo", "fifo_noshort", "reservation", "priority", "pecsched",
                 "pecsched/pe", "pecsched/dis", "pecsched/col", "pecsched/fsp",
                 "pecsched/coord", "pecsched/cache", "pecsched/cache_greedy",
-                "sjf_pred", "tail_aware")
+                "pecsched/slo", "sjf_pred", "tail_aware")
 
 
 def make_policy(name: str, cc: ClusterConfig, em: ExecutionModel) -> BasePolicy:
@@ -1430,6 +1611,8 @@ def make_policy(name: str, cc: ClusterConfig, em: ExecutionModel) -> BasePolicy:
         return PecSchedCachePolicy(cc, em)
     if name == "pecsched/cache_greedy":  # affinity-vs-balance ablation
         return PecSchedCachePolicy(cc, em, greedy=True)
+    if name == "pecsched/slo":  # SLO plan-ahead: slack order + shed + retract
+        return PecSchedSLOPolicy(cc, em)
     if name == "sjf_pred" or name.startswith("sjf_pred:"):
         spec = name.partition(":")[2] or "noisy0.6"
         return PredSJFPolicy(cc, em, predictor_spec=spec)

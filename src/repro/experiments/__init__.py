@@ -83,6 +83,18 @@ CELL_SETUP: Dict[Tuple[str, str], Dict] = {
     ("engine", "shared_prefix"): dict(
         n_requests=64, utilization=4.0,
         overrides=(("mean_cycle", 0.004),)),
+    # SLO cells: utilization just past calibrated short capacity with the
+    # tier contracts halved — the binding regime where plain PecSched's
+    # FIFO-within-class order drops interactive attainment below 0.95 and
+    # plan-ahead slack ordering wins it back.  The engine timeline spans
+    # milliseconds, so its burst cycle AND its SLO targets are compressed
+    # to the measured engine TTFT/TPOT scale (see claims.py slo_* notes).
+    ("sim", "slo_tiered"): dict(
+        n_requests=3000, utilization=1.05,
+        overrides=(("slo_scale", 0.5),)),
+    ("engine", "slo_tiered"): dict(
+        n_requests=64, utilization=1.05,
+        overrides=(("mean_cycle", 0.004), ("slo_scale", 0.0005))),
 }
 
 

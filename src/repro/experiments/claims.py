@@ -16,6 +16,8 @@ Expressions evaluate in a tiny closed namespace over one sweep cell
     preempt(pol) total long suspensions            idle(pol)  GPU idle rate
     starved(pol) long starvation fraction          devict(pol) decode evictions
     tenant_qd99(pol, tenant)  per-tenant short qd p99 (multi_tenant)
+    goodput(pol) SLO-honouring completions/s   attain(pol, tier) attainment
+    shedfrac(pol, tier)  shed fraction of a tier's arrivals (slo_tiered)
     ratio(a, b)  a / max(b, 1e-9)  (safe when a policy's delay hits 0.0)
     m(pol, *keys) raw summary access
 
@@ -135,6 +137,10 @@ def _env(results: SweepCell) -> Dict:
         "devict": lambda pol: m(pol, "decode_preemptions"),
         "hit": lambda pol: m(pol, "prefix_hit_rate"),
         "saved": lambda pol: m(pol, "prefill_flops_saved"),
+        "goodput": lambda pol: m(pol, "goodput"),
+        "attain": lambda pol, tier: m(pol, "slo_tiers", tier, "attainment"),
+        "shedfrac": lambda pol, tier: ratio(m(pol, "slo_tiers", tier, "shed"),
+                                            m(pol, "slo_tiers", tier, "n")),
     }
 
 
@@ -566,6 +572,72 @@ register_claim(
     direction="ge", threshold=0.9,
     scenario="shared_prefix", backends=("sim",),
     policies=("pecsched/cache_greedy", "pecsched/cache"))
+
+# --- SLO extension: plan-ahead scheduling with goodput as the objective ----
+# The `slo_tiered` cells pin a tight-contract overload regime (utilization
+# just past calibrated short capacity, halved SLO targets; see
+# experiments.CELL_SETUP): plain PecSched — FIFO within the short class —
+# drops interactive attainment below the 0.95 bar there, and the plan-ahead
+# policy's slack ordering + long-claim retraction wins it back without
+# giving up goodput or taxing longs.  The engine cell's 3-replica grid sits
+# in a different regime (compressed ms-scale timeline), so it pins the
+# weaker "plan-ahead never hurts" direction, like the coordination cells.
+register_claim(
+    cid="slo_goodput_gain", paper_ref="§7 (SLO extension)",
+    description="Plan-ahead scheduling does not trade goodput away: "
+                "SLO-honouring completions per second match or beat plain "
+                "PecSched on the tiered bursty mix",
+    metric_expr="ratio(goodput('pecsched/slo'), goodput('pecsched'))",
+    direction="ge", threshold=1.0,
+    scenario="slo_tiered", backends=("sim",),
+    policies=("pecsched/slo", "pecsched"))
+register_claim(
+    cid="slo_interactive_attained", paper_ref="§7 (SLO extension)",
+    description="The interactive tier meets its TTFT/TPOT contract at "
+                "least 95% of the time under plan-ahead scheduling",
+    metric_expr="attain('pecsched/slo', 'interactive')",
+    direction="ge", threshold=0.95,
+    scenario="slo_tiered", backends=("sim",),
+    policies=("pecsched/slo",))
+register_claim(
+    cid="slo_pecsched_misses", paper_ref="§7 (SLO extension)",
+    description="The regime is binding: plain PecSched (FIFO within the "
+                "short class) falls below the 0.95 interactive bar the "
+                "plan-ahead policy clears",
+    metric_expr="attain('pecsched', 'interactive')",
+    direction="le", threshold=0.95,
+    scenario="slo_tiered", backends=("sim",),
+    policies=("pecsched",))
+register_claim(
+    cid="slo_interactive_gain", paper_ref="§7 (SLO extension)",
+    description="Slack ordering + retraction strictly raise interactive "
+                "attainment over plain PecSched (sim); the tiny engine "
+                "grid pins the 'never hurts' direction",
+    metric_expr="attain('pecsched/slo', 'interactive') "
+                "- attain('pecsched', 'interactive')",
+    direction="ge", threshold=0.02,
+    thresholds=(("engine", 0.0),),
+    scenario="slo_tiered",
+    policies=("pecsched/slo", "pecsched"))
+register_claim(
+    cid="slo_batch_shed_bounded", paper_ref="§7 (SLO extension)",
+    description="Shedding stays surgical: at most 10% of batch-tier work "
+                "is dropped, and only when the plan window is provably "
+                "oversubscribed",
+    metric_expr="shedfrac('pecsched/slo', 'batch')",
+    direction="le", threshold=0.10,
+    scenario="slo_tiered", backends=("sim",),
+    policies=("pecsched/slo",))
+register_claim(
+    cid="slo_long_jct_cost", paper_ref="§7 (SLO extension)",
+    description="Retracting planned (never started) long placements under "
+                "urgency costs longs at most 10% mean JCT vs plain "
+                "PecSched",
+    metric_expr="ratio(jct('pecsched/slo'), jct('pecsched'))",
+    direction="le", threshold=1.1,
+    scenario="slo_tiered", backends=("sim",),
+    policies=("pecsched/slo", "pecsched"))
+
 
 # --- scenario extension: multi-tenant fairness -----------------------------
 register_claim(

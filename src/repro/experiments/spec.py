@@ -16,8 +16,10 @@ from typing import Dict, List, Sequence, Tuple
 
 #: bump when summary structure or workload construction changes meaning —
 #: every cached result keyed under the old version stops matching
-SCHEMA_VERSION = 4        # 4: prefix-cache fields in metrics.summarize +
-#                              chat_multiturn long-classification fix
+SCHEMA_VERSION = 5        # 5: TTFT/TPOT/goodput/slo_tiers/busy_overflow_s
+#                              in metrics.summarize + unified first-token
+#                              stamping (migrating shorts stamp at decode
+#                              start, not prefill completion)
 
 BACKENDS = ("sim", "engine")
 

@@ -23,6 +23,7 @@ from repro.configs import get_config, reduced_config
 from repro.core import (POLICY_NAMES, ClusterConfig, ExecutionModel, Phase,
                         SimBackend, Simulator, make_policy)
 from repro.core.request import Request
+from repro.core.scenarios import assign_slo_tiers
 from repro.models import init_params
 from repro.serving.backend import EngineBackend
 from repro.serving.engine import ReplicaEngine, SlotsFull
@@ -164,6 +165,91 @@ def test_decode_lane_eviction_parity_and_bitexact(cluster, engine_backend):
     Simulator(p_ref, backend=engine_backend).run(copy.deepcopy(trace))
     for rid in evicted:
         assert list(engine_backend.generated[rid]) == gen[rid], rid
+
+
+def tiered_trace(cc, em):
+    """Pinned tiered trace that walks pecsched/slo through its whole decision
+    vocabulary: two standard-tier shorts occupy the generals, a long then
+    queues and CLAIMS them, an interactive flood with near-zero contracts
+    turns the plan urgent (RETRACT), and a batch-tier flood worth several
+    plan windows forces SHED."""
+    width = em.prefill_time(cc.max_batch_tokens, 1, sp_mode="local")
+    mbt = cc.max_batch_tokens
+    reqs = [Request(rid=0, arrival=0.0, input_len=mbt, output_len=4,
+                    tenant="codegen"),
+            Request(rid=1, arrival=0.0, input_len=mbt, output_len=4,
+                    tenant="codegen"),
+            Request(rid=2, arrival=round(0.1 * width, 9), input_len=300_000,
+                    output_len=8, is_long=True, tenant="summarize")]
+    rid = 3
+    for i in range(10):
+        reqs.append(Request(rid=rid, arrival=round(0.2 * width + i * 1e-6, 9),
+                            input_len=1000, output_len=4, tenant="chat"))
+        rid += 1
+    for i in range(25):
+        reqs.append(Request(rid=rid, arrival=round(0.25 * width + i * 1e-6, 9),
+                            input_len=mbt, output_len=4, tenant="summarize"))
+        rid += 1
+    assign_slo_tiers(reqs, slo_scale=1e-6)
+    return reqs
+
+
+def test_slo_parity_on_tiered_trace(cluster, engine_backend):
+    """Acceptance pin: pecsched/slo replayed on the tiered trace makes
+    IDENTICAL decisions — including the SLO-specific shed/retract kinds —
+    in both execution worlds, and the SLO summary fields agree."""
+    cc, em = cluster
+    trace = tiered_trace(cc, em)
+
+    p_sim = make_policy("pecsched/slo", cc, em)
+    p_sim.record_decisions = True
+    s_sim = Simulator(p_sim).run(copy.deepcopy(trace))
+
+    engine_backend.reset()
+    p_eng = make_policy("pecsched/slo", cc, em)
+    p_eng.record_decisions = True
+    s_eng = Simulator(p_eng, backend=engine_backend).run(copy.deepcopy(trace))
+
+    assert p_sim.decision_log == p_eng.decision_log      # incl. timestamps
+    # the trace exercises the plan-ahead machinery, not just base dispatch
+    assert any(d[0] == "retract" for d in p_sim.decision_log), \
+        "pinned tiered trace no longer triggers urgency/retraction"
+    assert any(d[0] == "shed" for d in p_sim.decision_log), \
+        "pinned tiered trace no longer oversubscribes the plan window"
+    assert p_sim.plan_retractions == p_eng.plan_retractions
+    assert p_sim.shed_events == p_eng.shed_events
+    assert s_sim["goodput"] == s_eng["goodput"]
+    assert s_sim["slo_tiers"] == s_eng["slo_tiers"]
+    assert s_sim["long_completed"] == s_eng["long_completed"] == 1
+    assert {r.rid: r.first_token for r in p_sim.done_requests} == \
+        {r.rid: r.first_token for r in p_eng.done_requests}
+
+
+@pytest.mark.parametrize("pol", ["fifo", "pecsched", "pecsched/dis",
+                                 "sjf_pred"])
+def test_ttft_stamped_at_decode_landing_parity(cluster, engine_backend, pol):
+    """TTFT unification pin: every path (plain decode hand-off, migrating
+    shorts, /Dis inline-decode coloc, predicted-lane rounds) stamps
+    first_token when decode LANDS, identically across backends, and the
+    stamp is causally sane."""
+    cc, em = cluster
+    trace = mini_trace()
+
+    p_sim = make_policy(pol, cc, em)
+    Simulator(p_sim).run(copy.deepcopy(trace))
+
+    engine_backend.reset()
+    p_eng = make_policy(pol, cc, em)
+    Simulator(p_eng, backend=engine_backend).run(copy.deepcopy(trace))
+
+    ft_sim = {r.rid: r.first_token for r in p_sim.done_requests}
+    ft_eng = {r.rid: r.first_token for r in p_eng.done_requests}
+    assert ft_sim == ft_eng
+    for p in (p_sim, p_eng):
+        for r in p.done_requests:
+            assert r.first_token is not None
+            assert r.arrival <= r.first_token <= r.finish, (pol, r.rid)
+            assert r.ttft is not None and r.ttft >= 0.0
 
 
 # ---------------- measured-clock sweep ---------------------------------------

@@ -1,5 +1,6 @@
 """metrics.summarize: JSON stability, edge-case guards, slowdown,
-per-tenant breakdowns, and cross-seed aggregation."""
+per-tenant breakdowns, SLO/goodput fields, busy-overflow accounting,
+streaming-vs-retained byte parity, and cross-seed aggregation."""
 import copy
 import json
 from types import SimpleNamespace
@@ -7,8 +8,8 @@ from types import SimpleNamespace
 import numpy as np
 import pytest
 
-from repro.core import (ClusterConfig, ExecutionModel, Simulator,
-                        get_scenario, make_policy)
+from repro.core import (POLICY_NAMES, ClusterConfig, ExecutionModel,
+                        Simulator, get_scenario, make_policy)
 from repro.core.metrics import (AGGREGATE_KEYS, PCTS, _idle_rate, _short_rps,
                                 aggregate_seeds, ci95, pct, summarize)
 from repro.core.request import Phase, Request
@@ -103,6 +104,101 @@ def test_summarize_zero_replica_policy():
     s = summarize(pol, 0.0)
     assert s["gpu_idle_rate"] == 0.0 and s["short_rps"] == 0.0
     assert json.loads(json.dumps(s)) == s
+
+
+# ---------------- SLO / goodput fields --------------------------------------
+def test_ttft_tpot_goodput_fields_present(summary):
+    """Every summary carries the SLO-extension fields, tiered or not."""
+    assert summary["ttft_mean"] is not None and summary["ttft_mean"] > 0
+    assert set(summary["ttft_pct"]) == {str(p) for p in PCTS}
+    assert summary["tpot_mean"] is not None and summary["tpot_mean"] > 0
+    assert summary["goodput"] > 0          # untiered completions all count
+    assert summary["slo_shed"] == 0
+    assert "slo_tiers" not in summary      # untiered trace: no tier block
+
+
+def test_request_slo_met_contract():
+    r = Request(rid=0, arrival=1.0, input_len=10, output_len=11)
+    assert r.slo_met() is None             # no tier -> no verdict
+    r.slo, r.ttft_target, r.tpot_target = "interactive", 0.5, 0.1
+    assert r.slo_met() is False            # unfinished counts as a miss
+    r.first_token, r.finish, r.phase = 1.4, 2.4, Phase.DONE
+    assert r.ttft == pytest.approx(0.4)
+    assert r.tpot == pytest.approx(0.1)    # (2.4-1.4)/(11-1)
+    assert r.slo_met() is True
+    r.ttft_target = 0.3
+    assert r.slo_met() is False            # TTFT bust
+    r.ttft_target, r.tpot_target = 0.5, 0.05
+    assert r.slo_met() is False            # TPOT bust
+    r.tpot_target = None
+    assert r.slo_met() is True             # unbounded term drops out
+    r.shed = True
+    assert r.slo_met() is False            # shed is always a miss
+
+
+def test_slo_tiers_block_counts_misses_honestly(small_cluster):
+    """Tier attainment is over ARRIVALS: shed and unfinished requests are
+    misses, and goodput only counts contract-honouring completions."""
+    cc, em = small_cluster
+    reqs = get_scenario("slo_tiered", n_requests=40, seed=0,
+                        arrival_rps=30.0, slo_scale=0.5)
+    pol = make_policy("pecsched", cc, em)
+    s = Simulator(pol).run(copy.deepcopy(reqs))
+    tiers = s["slo_tiers"]
+    assert sum(t["n"] for t in tiers.values()) == len(reqs)
+    for t in tiers.values():
+        assert set(t) == {"n", "completed", "shed", "attained", "attainment"}
+        assert t["attained"] <= t["completed"] <= t["n"]
+        assert t["attainment"] == pytest.approx(t["attained"] / t["n"])
+    n_good = sum(1 for r in pol.all_requests if r.slo_met() is True)
+    span = (max(r.finish for r in pol.all_requests if r.finish is not None)
+            - min(r.arrival for r in pol.all_requests))
+    assert s["goodput"] == pytest.approx(n_good / span)
+
+
+# ---------------- busy-overflow accounting -----------------------------------
+def test_busy_overflow_zero_on_healthy_run(summary):
+    """Correct accounting never trips the counter — concurrent decode-pool
+    lanes (lane-seconds > wall-seconds by design) are excluded."""
+    assert summary["busy_overflow_s"] == 0.0
+
+
+def test_double_counted_add_busy_trips_overflow(small_cluster):
+    """The utilization/idle clamps are no longer silent: busy-seconds
+    booked beyond a role's actual occupancy surface as busy_overflow_s."""
+    cc, em = small_cluster
+    reqs = get_scenario("smoke_mini", n_requests=12, seed=0)
+    pol = make_policy("pecsched", cc, em)
+    sim = Simulator(pol)
+    sim.run(copy.deepcopy(reqs))
+    clean = summarize(pol, sim.now)
+    assert clean["busy_overflow_s"] == 0.0
+    general = next(r for r in pol.replicas if r.role == "general")
+    general.add_busy(2 * sim.now)          # double-counted busy interval
+    broken = summarize(pol, sim.now)
+    assert broken["busy_overflow_s"] >= sim.now
+    # the display clamps still hold, but no longer hide the bug
+    assert broken["gpu_idle_rate"] >= 0.0
+    assert all(v <= 1.0 for v in broken["role_utilization"].values())
+
+
+# ---------------- streaming vs retained byte parity --------------------------
+@pytest.mark.parametrize("pol_name", POLICY_NAMES)
+def test_streaming_retained_parity_truncated(small_cluster, pol_name):
+    """A horizon-truncated tiered run (unfinished shorts, starved longs,
+    pending migrations) must summarize BYTE-IDENTICALLY through the
+    streaming accumulator and the retained-request path — same keys, same
+    order, same floats — for every policy."""
+    cc, em = small_cluster
+    reqs = get_scenario("slo_tiered", n_requests=60, seed=3,
+                        arrival_rps=40.0, slo_scale=0.5)
+    p_ret = make_policy(pol_name, cc, em)
+    s_ret = Simulator(p_ret).run(copy.deepcopy(reqs), horizon=1.5)
+    assert any(r.finish is None for r in p_ret.all_requests), \
+        "horizon no longer truncates mid-flight; pick a shorter one"
+    p_str = make_policy(pol_name, cc, em).enable_streaming_metrics()
+    s_str = Simulator(p_str).run(copy.deepcopy(reqs), horizon=1.5)
+    assert json.dumps(s_ret) == json.dumps(s_str)
 
 
 # ---------------- cross-seed aggregation ------------------------------------

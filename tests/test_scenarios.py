@@ -10,7 +10,7 @@ from repro.core import (ARRIVAL_PROCESSES, EventHeap, Simulator, get_scenario,
 from repro.core.trace import TraceConfig, generate_trace
 
 NAMED = ["azure_default", "bursty", "heavy_tail", "diurnal", "multi_tenant",
-         "chat_multiturn"]
+         "chat_multiturn", "slo_tiered"]
 
 
 # ---------------------------------------------------------------------------
@@ -109,6 +109,42 @@ def test_multi_tenant_tags_all_tenants():
     assert len(by_tenant["chat"]) > len(by_tenant["summarize"])
     assert all(not r.is_long for r in by_tenant["chat"] + by_tenant["codegen"])
     assert any(r.is_long for r in by_tenant["summarize"])
+
+
+def test_slo_tiered_assigns_tier_contracts():
+    """slo_tiered maps tenants onto SLO tiers with scaled TTFT/TPOT
+    targets: chat->interactive, codegen->standard, summarize->batch (no
+    TTFT bound — long prefills legitimately take minutes)."""
+    from repro.core.scenarios import DEFAULT_SLO_TIERS, DEFAULT_TIER_MAP
+    reqs = get_scenario("slo_tiered", n_requests=2000, seed=4, slo_scale=0.5)
+    tiers = {r.slo for r in reqs}
+    assert tiers == {"interactive", "standard", "batch"}
+    for r in reqs:
+        assert r.slo == DEFAULT_TIER_MAP[r.tenant]
+        ttft_mult, tpot_mult = DEFAULT_SLO_TIERS[r.slo]
+        if ttft_mult is None:
+            assert r.ttft_target is None
+        else:
+            assert r.ttft_target == pytest.approx(ttft_mult * 0.5)
+        assert r.tpot_target == pytest.approx(tpot_mult * 0.5)
+    # bursty arrivals: MMPP, visibly heavier than Poisson
+    gaps = np.diff([r.arrival for r in reqs])
+    assert gaps.std() / gaps.mean() > 1.3
+
+
+def test_assign_slo_tiers_defaults_unknown_tenants():
+    """Requests from tenants outside the map (or untagged) land on the
+    default tier rather than escaping the contract."""
+    from repro.core.scenarios import assign_slo_tiers
+    from repro.core.request import Request
+    reqs = [Request(rid=0, arrival=0.0, input_len=10, output_len=5,
+                    tenant="mystery"),
+            Request(rid=1, arrival=0.0, input_len=10, output_len=5)]
+    assign_slo_tiers(reqs, slo_scale=2.0)
+    for r in reqs:
+        assert r.slo == "standard"
+        assert r.ttft_target == pytest.approx(4.0 * 2.0)
+        assert r.tpot_target == pytest.approx(0.20 * 2.0)
 
 
 def test_chat_multiturn_sessions_grow_context():

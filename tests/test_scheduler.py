@@ -1,12 +1,18 @@
 """Cluster-scheduler tests: system invariants + directional paper claims on
-a small calibrated trace (full-scale claims run in benchmarks/)."""
+a small calibrated trace (full-scale claims run in benchmarks/), plus the
+SLO plan-ahead policy's shed / slack-order / retraction mechanics."""
 import copy
 
 import pytest
 
-from repro.core import (Phase, Simulator, TraceConfig, experiment_trace,
-                        generate_trace, make_policy, paper_cluster,
+from repro.configs import get_config, reduced_config
+from repro.core import (ClusterConfig, ExecutionModel, Phase, Simulator,
+                        TraceConfig, experiment_trace, generate_trace,
+                        get_scenario, make_policy, paper_cluster,
                         trace_stats)
+from repro.core.request import Request
+from repro.core.scenarios import assign_slo_tiers
+from repro.core.schedulers import PecSchedSLOPolicy
 
 POLICIES = ["fifo", "reservation", "priority", "pecsched", "pecsched/pe",
             "pecsched/dis", "pecsched/col", "pecsched/fsp"]
@@ -114,6 +120,107 @@ def test_ablation_col_preempts_more(results):
     """Table 6: preempting long decode (/CoL) raises suspensions."""
     assert results["pecsched/col"][0]["preemptions"] >= \
         results["pecsched"][0]["preemptions"]
+
+
+# ---------------- SLO plan-ahead policy (pecsched/slo) -----------------------
+@pytest.fixture(scope="module")
+def slo_cluster():
+    cfg = reduced_config(get_config("mistral_7b"), layers=2)
+    cc = ClusterConfig(n_nodes=1, gpus_per_node=3, tp=1,
+                       n_short_decode_replicas=1)
+    return cc, ExecutionModel(cfg, cc.replica_spec(), target_prefill_s=0.5)
+
+
+def test_slo_untiered_degrades_to_pecsched(slo_cluster):
+    """On an untiered trace every deadline is infinite: slack order reduces
+    to arrival order, nothing sheds, nothing retracts — pecsched/slo makes
+    EXACTLY plain PecSched's decisions."""
+    cc, em = slo_cluster
+    reqs = get_scenario("azure_default", n_requests=80, seed=2,
+                        arrival_rps=30.0)
+    p_base = make_policy("pecsched", cc, em)
+    p_base.record_decisions = True
+    Simulator(p_base).run(copy.deepcopy(reqs))
+    p_slo = make_policy("pecsched/slo", cc, em)
+    p_slo.record_decisions = True
+    s = Simulator(p_slo).run(copy.deepcopy(reqs))
+    assert p_slo.decision_log == p_base.decision_log
+    assert s["slo_shed"] == 0 and p_slo.plan_retractions == 0
+
+
+def test_slo_slack_ordering_prefers_contracted_work(slo_cluster):
+    """Batch-tier work arrives FIRST but interactive work (finite TTFT
+    deadline) prefills first — earliest-deadline order beats arrival
+    order inside the short class."""
+    cc, em = slo_cluster
+    reqs = [Request(rid=i, arrival=0.0, input_len=1500, output_len=5,
+                    tenant="summarize" if i < 3 else "chat")
+            for i in range(6)]
+    assign_slo_tiers(reqs, slo_scale=0.5)
+    p = make_policy("pecsched/slo", cc, em)
+    p.record_decisions = True
+    s = Simulator(p).run(copy.deepcopy(reqs))
+    starts = [d for d in p.decision_log
+              if d[0] == "start" and d[1].startswith("short_prefill")]
+    assert set(starts[0][3]) <= {3, 4, 5}, starts[0]
+    assert s["short_completed"] == 6       # batch work still completes
+
+
+def test_slo_sheds_batch_tier_when_oversubscribed(slo_cluster):
+    """With a one-slot plan window and a flood worth many windows of
+    prefill, batch-tier work planned past the window is shed: terminal
+    STARVED + Request.shed, logged, counted per tier — and conservation
+    still holds."""
+    cc, em = slo_cluster
+    reqs = [Request(rid=i, arrival=0.0, input_len=cc.max_batch_tokens,
+                    output_len=4, tenant="summarize") for i in range(40)]
+    assign_slo_tiers(reqs)
+    p = PecSchedSLOPolicy(cc, em, plan_slots=1)
+    p.record_decisions = True
+    sim = Simulator(p)
+    s = sim.run(copy.deepcopy(reqs))
+    assert s["slo_shed"] > 0
+    assert s["slo_tiers"]["batch"]["shed"] == s["slo_shed"] == p.shed_events
+    assert sum(1 for d in p.decision_log if d[0] == "shed") == s["slo_shed"]
+    shed = [r for r in p.all_requests if r.shed]
+    for r in shed:
+        assert r.phase == Phase.STARVED and r.finish is None
+        assert r.slo_met() is False
+    done = s["short_completed"] + s["long_completed"]
+    starved = sum(1 for r in p.all_requests if r.phase == Phase.STARVED)
+    assert done + starved == len(reqs)
+    # interactive work is never shed, whatever the pressure
+    assert all(r.slo == "batch" for r in shed)
+
+
+def test_slo_urgency_retracts_pending_long_claims(slo_cluster):
+    """A queued long claims busy replicas (they admit no new work while the
+    gang drains); when interactive deadlines become unmeetable the plan
+    turns urgent and those claims are retracted — and the long still runs
+    to completion once the burst clears."""
+    cc, em = slo_cluster
+    width = em.prefill_time(cc.max_batch_tokens, 1, sp_mode="local")
+    reqs = [Request(rid=0, arrival=0.0, input_len=cc.max_batch_tokens,
+                    output_len=4, tenant="codegen"),
+            Request(rid=1, arrival=0.0, input_len=cc.max_batch_tokens,
+                    output_len=4, tenant="codegen"),
+            Request(rid=2, arrival=round(0.1 * width, 9), input_len=300_000,
+                    output_len=8, is_long=True, tenant="summarize")]
+    reqs += [Request(rid=3 + i, arrival=round(0.2 * width + i * 1e-6, 9),
+                     input_len=1000, output_len=4, tenant="chat")
+             for i in range(10)]
+    # near-zero scale: interactive deadlines are unmeetable the moment the
+    # requests queue, so the first replan under the flood must go urgent
+    assign_slo_tiers(reqs, slo_scale=1e-6)
+    p = make_policy("pecsched/slo", cc, em)
+    p.record_decisions = True
+    s = Simulator(p).run(copy.deepcopy(reqs))
+    assert p.plan_retractions > 0
+    retracted = [d for d in p.decision_log if d[0] == "retract"]
+    assert retracted and all(d[1] == 2 for d in retracted)
+    assert s["long_completed"] == 1        # retraction delays, never starves
+    assert s["short_completed"] == 12
+    assert not p.index.claims               # nothing left half-claimed
 
 
 # ---------------- trace properties (seeded property-style) -------------------
