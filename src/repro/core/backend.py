@@ -37,6 +37,38 @@ priced into `duration`); EngineBackend gang-schedules a multi-replica
 
 The split means every `make_policy` name and every `get_scenario` workload
 runs on both worlds with zero per-policy glue.
+
+Work lifecycle, end to end:
+
+    1. policy builds ``Work(wid, kind, replica_ids, requests, start,
+       duration, ...)`` — `duration` is its cost-model estimate, `sp_mode`
+       the sequence-parallel plan ("local"|"ring"|"fastsp"), and
+       `token_budget` (decode works) the per-round token allowance the
+       policy granted
+    2. ``backend.submit(work)`` — SimBackend schedules DONE at
+       ``start + duration``; EngineBackend starts real quanta
+    3. the Simulator pops the completion and calls ``policy.on_done`` —
+       or the policy preempts first via ``backend.cancel(work)`` and the
+       pending completion never fires
+    4. under churn, ``backend.reclaim_replica`` parks any KV physically
+       resident on a dying replica so migrated requests can resume on a
+       survivor
+
+Worked example — replay a small scenario under FIFO on the analytic
+backend (the default), then the same decisions on real engines::
+
+    from repro.core import Simulator, get_scenario, make_policy
+    from repro.core.workload import paper_cluster
+
+    cc, em = paper_cluster("mistral_7b")
+    reqs = get_scenario("azure_default", n_requests=100, seed=0,
+                        arrival_rps=2.0)
+    res = Simulator(make_policy("fifo", cc, em)).run(reqs)   # SimBackend
+    res["short_qd_pct"]["99"]          # paper Fig 2/3 headline metric
+
+    # same policy, real JAX engines (see repro/serving/backend.py):
+    #   Simulator(policy, backend=EngineBackend(cfg, params,
+    #                                           clock="analytic"))
 """
 from __future__ import annotations
 
@@ -75,6 +107,15 @@ class ExecutionBackend:
         safe point actually held on the hardware: the engine must be
         drained (no live decode slots, no resident gang KV) before its
         replica may serve under a different role."""
+
+    def reclaim_replica(self, t: float, rid: int) -> dict:
+        """Replica `rid` is being reclaimed (spot eviction): park any KV
+        physically resident on it so migrated requests can resume
+        elsewhere, and drop its prefix cache.  The policy has already
+        evacuated its *scheduling* state via `on_reclaim`.  Analytic
+        backends hold no physical state — the cost model priced the
+        migration — so the base answer is an empty summary."""
+        return {}
 
     # -- driver hooks ---------------------------------------------------
     def on_event(self, t: float, kind: str, payload) -> None:

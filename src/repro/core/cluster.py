@@ -76,7 +76,8 @@ class ReplicaState:
     __slots__ = ("rid", "node", "_role", "_work", "_claimed_by", "_long_rid",
                  "_long_phase", "_coloc_tokens", "_decode_load", "busy_time",
                  "queue_tokens", "_draining", "role_since", "role_time",
-                 "busy_by_role", "_index")
+                 "busy_by_role", "_index", "_reclaiming", "retired_at",
+                 "joined_at")
 
     def __init__(self, rid: int, node: int, role: str = "general"):
         self.rid = rid
@@ -98,6 +99,10 @@ class ReplicaState:
         self.role_time: Dict[str, float] = {}
         self.busy_by_role: Dict[str, float] = {}
         self._index: Optional["ClusterIndex"] = None
+        # --- fleet elasticity (core/fleet.py) ---
+        self._reclaiming = False        # reclamation notice: no NEW placements
+        self.retired_at: Optional[float] = None   # left the fleet at this time
+        self.joined_at = 0.0            # joined the fleet at this time
 
     def __repr__(self) -> str:          # pragma: no cover - debug aid
         return (f"ReplicaState(rid={self.rid}, node={self.node}, "
@@ -191,6 +196,46 @@ class ReplicaState:
     def idle(self) -> bool:
         return self._work is None and self._long_rid is None
 
+    # ---- fleet elasticity --------------------------------------------
+    @property
+    def reclaiming(self) -> bool:
+        return self._reclaiming
+
+    @reclaiming.setter
+    def reclaiming(self, value: bool) -> None:
+        self._reclaiming = value
+        if self._index is not None:
+            self._index.update(self)
+
+    @property
+    def retired(self) -> bool:
+        return self.retired_at is not None
+
+    @property
+    def available(self) -> bool:
+        """Eligible for NEW placements: neither under a reclamation notice
+        nor already retired.  Every placement-set predicate requires this,
+        so a noticed replica drains naturally while the fleet routes new
+        work elsewhere."""
+        return not self._reclaiming and self.retired_at is None
+
+    def retire(self, t: float) -> None:
+        """Leave the fleet at time `t`.  The caller (FleetController) must
+        have evacuated the replica first — retiring with work, long-group
+        membership, a claim, or live decode lanes would strand state the
+        index can no longer see."""
+        assert self._work is None and self._long_rid is None \
+            and self._claimed_by is None and self._decode_load == 0, \
+            f"retire of non-evacuated replica {self.rid}"
+        self.retired_at = t
+        # close the live role-occupancy interval so metrics stop charging
+        # this replica's role after it is gone
+        self.role_time[self._role] = self.role_time.get(self._role, 0.0) \
+            + max(t - self.role_since, 0.0)
+        self.role_since = t
+        if self._index is not None:
+            self._index.update(self)
+
     # ------------------------------------------------------------------
     def set_role(self, t: float, new_role: str) -> str:
         """Transition to `new_role` at time `t`, closing the occupancy
@@ -217,11 +262,19 @@ class ReplicaState:
 
     def role_occupancy(self, t_end: float) -> Dict[str, float]:
         """Seconds spent in each role up to `t_end` (closes the live
-        interval without mutating state)."""
+        interval without mutating state).  A retired replica's intervals
+        were closed by `retire`, so nothing accrues past its departure."""
         out = dict(self.role_time)
-        out[self._role] = out.get(self._role, 0.0) \
-            + max(t_end - self.role_since, 0.0)
+        if self.retired_at is None:
+            out[self._role] = out.get(self._role, 0.0) \
+                + max(t_end - self.role_since, 0.0)
         return out
+
+    def lifespan(self, t_end: float) -> float:
+        """Seconds this replica was part of the fleet within [0, t_end] —
+        the idle-rate denominator for elastic fleets."""
+        end = t_end if self.retired_at is None else min(self.retired_at, t_end)
+        return max(end - self.joined_at, 0.0)
 
 
 class PrefixResidency:
@@ -285,6 +338,17 @@ class PrefixResidency:
                 best_rid, best = rid, c
         return best_rid, best
 
+    def drop_replica(self, rid: int) -> None:
+        """Forget everything resident on `rid` — the analytic twin of the
+        engine dropping its block-hash `cached` index when the replica is
+        reclaimed.  Unknown rids are a no-op (a replica that never recorded
+        residency has nothing to drop)."""
+        self._maps.pop(rid, None)
+
+    def add_replica(self, rid: int) -> None:
+        """Start tracking a joining replica (empty residency)."""
+        self._maps.setdefault(rid, OrderedDict())
+
     def clear(self) -> None:
         for m in self._maps.values():
             m.clear()
@@ -316,6 +380,14 @@ class ClusterIndex:
     Selection order contract: callers that need the historical scan order
     (replica-list order == ascending rid) use `min(set)` / `sorted(set)`,
     which is identical because rids are dense and list-ordered.
+
+    Elastic fleets (core/fleet.py) preserve that contract by never
+    renumbering: a joining replica appends with rid == len(replicas), and a
+    leaving replica is marked `retired` — dropped from every membership set
+    but still list-addressable, so `self.replicas[rid]` and the dense-rid
+    ordering stay valid for the survivors.  A replica under a reclamation
+    notice (`reclaiming`) keeps its role but leaves every PLACEMENT set, so
+    in-flight work drains while nothing new lands on it.
     """
 
     __slots__ = ("replicas", "by_role", "idle_general", "idle_prefill",
@@ -362,7 +434,7 @@ class ClusterIndex:
         """`work` changed: only the idle sets (idle ∧ unclaimed) move."""
         rid = rep.rid
         if rep._work is None and rep._long_rid is None \
-                and rep._claimed_by is None:
+                and rep._claimed_by is None and rep.available:
             role = rep._role
             if role == "general":
                 self.idle_general.add(rid)
@@ -381,7 +453,8 @@ class ClusterIndex:
         if w is None:
             for rep in reps:
                 rep._work = None
-                if rep._long_rid is None and rep._claimed_by is None:
+                if rep._long_rid is None and rep._claimed_by is None \
+                        and rep.available:
                     role = rep._role
                     if role == "general":
                         ig.add(rep.rid)
@@ -399,19 +472,19 @@ class ClusterIndex:
         """`long_rid` or `claimed_by` changed: idle sets + free_general."""
         self.avail_changed(rep)
         if rep._role == "general" and rep._long_rid is None \
-                and rep._claimed_by is None:
+                and rep._claimed_by is None and rep.available:
             self.free_general.add(rep.rid)
         else:
             self.free_general.discard(rep.rid)
 
     def phase_changed(self, rep: ReplicaState) -> None:
         """`long_phase` changed: only the colocation-candidate sets move."""
-        if rep._long_phase == "decode":
+        if rep._long_phase == "decode" and rep.retired_at is None:
             self.long_decode.add(rep.rid)
-            if self.max_coloc_tokens is None \
-                    or rep._coloc_tokens < self.max_coloc_tokens:
+            if rep.available and (self.max_coloc_tokens is None
+                                  or rep._coloc_tokens < self.max_coloc_tokens):
                 self.coloc_room.add(rep.rid)
-            else:                       # pragma: no cover - defensive
+            else:
                 self.coloc_room.discard(rep.rid)
         else:
             self.long_decode.discard(rep.rid)
@@ -419,7 +492,7 @@ class ClusterIndex:
 
     def coloc_changed(self, rep: ReplicaState) -> None:
         """`coloc_tokens` changed: only headroom membership moves."""
-        if rep._long_phase == "decode" and (
+        if rep._long_phase == "decode" and rep.available and (
                 self.max_coloc_tokens is None
                 or rep._coloc_tokens < self.max_coloc_tokens):
             self.coloc_room.add(rep.rid)
@@ -427,9 +500,11 @@ class ClusterIndex:
             self.coloc_room.discard(rep.rid)
 
     def draining_changed(self, rep: ReplicaState) -> None:
-        """`draining` changed: only the active/draining pool split moves."""
+        """`draining` changed: only the active/draining pool split moves.
+        A reclaiming/retired replica joins NEITHER pool: the coordinator
+        must not count it as capacity nor flip its role once drained."""
         rid = rep.rid
-        if rep._role == "short_decode":
+        if rep._role == "short_decode" and rep.available:
             if rep._draining:
                 self.active_pool.discard(rid)
                 self.draining_pool.add(rid)
@@ -446,13 +521,14 @@ class ClusterIndex:
         transition above)."""
         rid = rep.rid
         role = rep._role
+        avail = rep.available
         for r, members in self.by_role.items():
-            if r == role:
+            if r == role and rep.retired_at is None:
                 members.add(rid)
             else:
                 members.discard(rid)
         idle_unclaimed = (rep._work is None and rep._long_rid is None
-                         and rep._claimed_by is None)
+                         and rep._claimed_by is None and avail)
         if role == "general" and idle_unclaimed:
             self.idle_general.add(rid)
         else:
@@ -462,19 +538,34 @@ class ClusterIndex:
         else:
             self.idle_prefill.discard(rid)
         if role == "general" and rep._long_rid is None \
-                and rep._claimed_by is None:
+                and rep._claimed_by is None and avail:
             self.free_general.add(rid)
         else:
             self.free_general.discard(rid)
-        if role == "short_decode" and not rep._draining:
+        if role == "short_decode" and not rep._draining and avail:
             self.active_pool.add(rid)
         else:
             self.active_pool.discard(rid)
-        if role == "short_decode" and rep._draining:
+        if role == "short_decode" and rep._draining and avail:
             self.draining_pool.add(rid)
         else:
             self.draining_pool.discard(rid)
         self.phase_changed(rep)
+
+    def add_replica(self, rep: ReplicaState) -> None:
+        """A new replica joins the fleet (autoscale-up).  It appends to the
+        SAME list object every policy holds as `self.replicas`, with the
+        next dense rid, so existing `min(set)`/`sorted(set)` selection and
+        `replicas[rid]` addressing keep working unchanged."""
+        assert rep.rid == len(self.replicas), \
+            f"joining rid {rep.rid} must extend the dense rid space " \
+            f"(expected {len(self.replicas)})"
+        self.replicas.append(rep)
+        rep._index = self
+        self.prefix_residency.add_replica(rep.rid)
+        if rep._role == "short_decode":
+            self.pool_decode_load += rep._decode_load
+        self.update(rep)
 
     def claim_changed(self, rep: ReplicaState, old: Optional[int],
                       new: Optional[int]) -> None:
@@ -499,24 +590,29 @@ class ClusterIndex:
             "claims": {}, "pool_decode_load": 0,
         }
         for rep in self.replicas:
+            if rep.retired_at is not None:
+                # a retired replica is a member of nothing except any
+                # lingering claim bookkeeping (which retire() forbids)
+                continue
+            avail = rep.available
             exp["by_role"][rep._role].add(rep.rid)
             idle_unclaimed = (rep._work is None and rep._long_rid is None
-                             and rep._claimed_by is None)
+                             and rep._claimed_by is None and avail)
             if rep._role == "general" and idle_unclaimed:
                 exp["idle_general"].add(rep.rid)
             if rep._role in PREFILL_CAPABLE and idle_unclaimed:
                 exp["idle_prefill"].add(rep.rid)
             if rep._role == "general" and rep._long_rid is None \
-                    and rep._claimed_by is None:
+                    and rep._claimed_by is None and avail:
                 exp["free_general"].add(rep.rid)
-            if rep._role == "short_decode" and not rep._draining:
+            if rep._role == "short_decode" and not rep._draining and avail:
                 exp["active_pool"].add(rep.rid)
-            if rep._role == "short_decode" and rep._draining:
+            if rep._role == "short_decode" and rep._draining and avail:
                 exp["draining_pool"].add(rep.rid)
             if rep._long_phase == "decode":
                 exp["long_decode"].add(rep.rid)
-                if self.max_coloc_tokens is None \
-                        or rep._coloc_tokens < self.max_coloc_tokens:
+                if avail and (self.max_coloc_tokens is None
+                              or rep._coloc_tokens < self.max_coloc_tokens):
                     exp["coloc_room"].add(rep.rid)
             if rep._claimed_by is not None:
                 exp["claims"].setdefault(rep._claimed_by, set()).add(rep.rid)

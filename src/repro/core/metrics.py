@@ -267,6 +267,10 @@ def _summarize_streaming(policy, acc: MetricsAccumulator,
         "gpu_idle_rate": _idle_rate(policy, t_end),
         "busy_overflow_s": 0.0,     # refined by _role_breakdown below
         "role_flips": len(getattr(policy, "role_log", ())),
+        "reclaims": int(getattr(policy, "reclaims", 0)),
+        "evacuated_blocks": int(getattr(policy, "evacuated_blocks", 0)),
+        "restarted_requests": int(getattr(policy, "restarted_requests", 0)),
+        "joins": int(getattr(policy, "joins", 0)),
     }
     out.update(_prefix_cache_fields(policy))
     roles = _role_breakdown(policy, t_end)
@@ -392,6 +396,14 @@ def summarize(policy, t_end: float) -> Dict:
         # §5.2 coordination: replica role flips performed by the coordinator
         # (0 for every static policy)
         "role_flips": len(getattr(policy, "role_log", ())),
+        # elastic-fleet churn (core/fleet.py): replicas reclaimed, KV blocks
+        # evacuated at cost-model price, and requests restarted from scratch
+        # because their work was stranded on a reclaimed replica (all 0 on a
+        # static fleet)
+        "reclaims": int(getattr(policy, "reclaims", 0)),
+        "evacuated_blocks": int(getattr(policy, "evacuated_blocks", 0)),
+        "restarted_requests": int(getattr(policy, "restarted_requests", 0)),
+        "joins": int(getattr(policy, "joins", 0)),
     }
     # prefix-cache routing (pecsched/cache): dispatch-time lookups/hits and
     # the prefill FLOPs the resident prefixes skipped (0 for cache-free
@@ -480,7 +492,12 @@ def _role_breakdown(policy, t_end: float) -> Optional[Dict]:
             occ[role] = occ.get(role, 0.0) + secs
         for role, secs in r.busy_by_role.items():
             busy[role] = busy.get(role, 0.0) + secs
-    total = t_end * len(replicas)
+    # elastic fleets: a replica only accounts for the time it existed
+    # (join -> reclaim), so churned runs aren't charged phantom occupancy
+    total = sum((r.lifespan(t_end) if hasattr(r, "lifespan") else t_end)
+                for r in replicas)
+    if total <= 0:                      # pragma: no cover - degenerate
+        return None
     overflow = sum(max(busy.get(role, 0.0) - occ.get(role, 0.0), 0.0)
                    for role in set(busy) | set(occ)
                    if role != "short_decode")
@@ -512,7 +529,12 @@ def _idle_rate(policy, t_end: float) -> float:
     if t_end <= 0 or not replicas:
         return 0.0
     total_busy = sum(r.busy_time for r in replicas)
-    total = t_end * len(replicas)
+    # lifespan-weighted denominator: reclaimed/joined replicas only count
+    # while they exist (static fleets: lifespan == t_end, as before)
+    total = sum((r.lifespan(t_end) if hasattr(r, "lifespan") else t_end)
+                for r in replicas)
+    if total <= 0:                      # pragma: no cover - degenerate
+        return 0.0
     # floored at 0 for display; over-counted busy-time (negative idle) is
     # surfaced via `busy_overflow_s` rather than silently swallowed —
     # per-role overflow is a superset of this aggregate (busy_by_role sums
@@ -602,7 +624,9 @@ AGGREGATE_KEYS = ("short_qd_mean", "short_rps", "long_jct_mean",
                   "decode_preemptions", "role_flips",
                   "prefix_hit_rate", "prefill_flops_saved",
                   "ttft_mean", "tpot_mean", "goodput", "slo_shed",
-                  "busy_overflow_s")
+                  "busy_overflow_s",
+                  "reclaims", "evacuated_blocks", "restarted_requests",
+                  "joins")
 
 
 def aggregate_seeds(summaries: Iterable[Dict],

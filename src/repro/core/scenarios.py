@@ -23,6 +23,11 @@ across every regime with `get_scenario(name)`:
                     the accumulated conversation context
     shared_prefix   many users, few shared system prompts, bursty arrivals —
                     the millions-of-users prefix-cache regime
+    churn           the azure_default mix, tagged for the elastic-fleet
+                    layer: the experiment runner injects a 20% spot
+                    reclamation wave (core/fleet.py) when replaying it
+    churn_scale     the churn regime with autoscale backfill enabled —
+                    the recovery-claims cell (overloaded, joins allowed)
     csv             replay a real Azure-trace-format file (pass path=...)
 
 Every builder takes (n_requests, seed, **overrides) and is deterministic
@@ -128,6 +133,30 @@ def pred_stress(n_requests: int, seed: int, **overrides) -> List[Request]:
                       arrival_params=(("cv", 3.0),), input_sigma=2.2,
                       input_max=60_000, output_sigma=0.35,
                       long_quantile=0.997, long_high=250_000)
+
+
+@register_scenario("churn",
+                   "Azure mix replayed under elastic-fleet churn (the "
+                   "runner injects a 20% spot-reclamation wave)")
+def churn(n_requests: int, seed: int, **overrides) -> List[Request]:
+    """The trace itself is the azure_default mix — churn is a property of
+    the FLEET, not the arrivals.  The scenario name is what keys the
+    experiment runner's default `FleetController` (a 20%-of-fleet
+    reclamation wave at the first arrival quartile, notice window 1% of
+    the trace span); `fleet_*` spec overrides retune it."""
+    return _azure_mix(n_requests, seed, overrides)
+
+
+@register_scenario("churn_scale",
+                   "Churn regime with the pressure-driven autoscaler "
+                   "allowed to backfill the reclaimed capacity")
+def churn_scale(n_requests: int, seed: int, **overrides) -> List[Request]:
+    """Same azure mix as `churn`; the claims grid runs this cell
+    overloaded (utilization past the post-wave capacity knee) with
+    ``fleet_autoscale`` on, so the recovery claims can pin that scale-up
+    joins fire under backlog pressure and bound the surviving p99.  The
+    wave itself still comes from the runner's fleet defaults."""
+    return _azure_mix(n_requests, seed, overrides)
 
 
 @register_scenario("diurnal",

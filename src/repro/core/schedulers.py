@@ -95,6 +95,12 @@ class BasePolicy:
         self.metrics_acc = None
         self.preemption_events = 0          # total suspensions (paper Table 3/6)
         self.decode_preemption_events = 0   # decode-lane evictions (sjf_pred)
+        # --- elastic-fleet counters (core/fleet.py; metrics.summarize) ---
+        self.reclaims = 0                   # replicas reclaimed mid-run
+        self.evacuated_blocks = 0           # KV blocks migrated off reclaimed
+        #                                     replicas (cost-model block grain)
+        self.restarted_requests = 0         # stranded work restarted from queue
+        self.joins = 0                      # autoscale joins applied mid-run
         self.per_request_sched: Dict[int, float] = {}
         # cross-backend parity harness: when enabled, every placement,
         # preemption and role-flip decision is appended as a tuple so two
@@ -253,6 +259,55 @@ class BasePolicy:
         return batch
 
     # ------------------------------------------------------------------
+    # Elastic-fleet hooks (called by core/fleet.py's FleetController).
+    # None of these run on a churn-free trace, so a policy that never sees
+    # churn behaves bit-identically to one predating these hooks.
+    # ------------------------------------------------------------------
+    def _kv_blocks(self, tokens: int) -> int:
+        """Cost-model KV footprint of `tokens` in paged-cache blocks."""
+        return -(-int(tokens) // max(self.cc.kv_block_size, 1))
+
+    def _requeue_front(self, req: Request) -> None:
+        """Put a restarted request back at the FRONT of the policy's queue
+        (it already waited its turn once).  Subclasses route to their own
+        queue structure."""
+        raise NotImplementedError
+
+    def _restart_requests(self, t: float, reqs: List[Request]) -> None:
+        """Restart-from-scratch arm of graceful degradation: the stranded
+        requests lose their compute (the replica's KV dies with it) and
+        requeue at the front in original order."""
+        for r in reversed(reqs):
+            r.phase = Phase.QUEUED
+            r.prefill_start = None
+            r.first_token = None
+            self.restarted_requests += 1
+            self._requeue_front(r)
+
+    def on_reclaim_notice(self, t: float, rep: ReplicaState) -> None:
+        """A reclamation notice landed on `rep`.  The index already dropped
+        it from every placement set, so the default is to let in-flight
+        work drain through the notice window; subclasses may act earlier."""
+
+    def on_reclaim(self, t: float, rep: ReplicaState) -> None:
+        """Vacate `rep` NOW — its reclamation deadline fired.  After this
+        returns the replica must hold no work, no long-group membership, no
+        claim, and no decode load (FleetController retires it next).  The
+        default covers policies whose entire occupancy is `rep.work`:
+        cancel it (gang-wide) and restart its requests."""
+        w = rep.work
+        if w is not None and not w.canceled:
+            self.backend.cancel(w)
+            self._release(w, busy=max(t - w.start, 0.0))
+            self._restart_requests(t, w.requests)
+
+    def on_join(self, t: float, rep: ReplicaState) -> None:
+        """A new replica joined (autoscale-up).  The index has already
+        admitted it to the placement sets, which is all most policies need;
+        subclasses with construction-time capacity snapshots refresh them
+        here."""
+
+    # ------------------------------------------------------------------
     def finalize(self, t: float) -> None:
         pass
 
@@ -359,6 +414,9 @@ class FIFOPolicy(BasePolicy):
             batch.append(queue.popleft())
         return batch
 
+    def _requeue_front(self, req):
+        self.queue.appendleft(req)
+
 
 class ReservationPolicy(FIFOPolicy):
     """Llumnix-style reservation: a dedicated replica set sized for 500 K-token
@@ -415,6 +473,21 @@ class ReservationPolicy(FIFOPolicy):
             batch.append(queue.popleft())
         return batch
 
+    def _requeue_front(self, req):
+        (self.long_queue if req.is_long else self.short_queue).appendleft(req)
+
+    def on_reclaim(self, t, rep):
+        super().on_reclaim(t, rep)
+        # the reserved long pool shrinks with the fleet; never let it empty
+        # while general capacity remains, or longs would starve forever
+        self.reserved.discard(rep.rid)
+        if not self.reserved:
+            cands = [r.rid for r in self.replicas
+                     if r.available and r.rid != rep.rid
+                     and r.role == "general"]
+            if cands:
+                self.reserved.add(min(cands))
+
 
 class PriorityPolicy(FIFOPolicy):
     """Past-Future-style priority: shorts get strict priority; longs run only
@@ -453,6 +526,9 @@ class PriorityPolicy(FIFOPolicy):
     def finalize(self, t):
         for r in self.long_queue:
             r.phase = Phase.STARVED
+
+    def _requeue_front(self, req):
+        (self.long_queue if req.is_long else self.short_queue).appendleft(req)
 
 
 # ===========================================================================
@@ -751,6 +827,8 @@ class PecSchedPolicy(BasePolicy):
     def needs_dispatch(self, t):
         if self.short_queue or self.long_queue or self._paused:
             return True
+        if self.decode_queue and not self.index.active_pool:
+            return True                 # stranded migrants (churn fallback)
         if self.coordinator is not None:
             # with empty queues the coordinator can only act on borrowed
             # replicas (return them) or draining ones (complete the drain);
@@ -769,6 +847,8 @@ class PecSchedPolicy(BasePolicy):
             self.coordinator.step(t, self)
         # gate each sub-pass on the state it drains: most passes have work
         # for only one of them, and a skipped call costs nothing
+        if self.decode_queue and not self.index.active_pool:
+            self._decode_stranded_inplace(t)
         if self.long_queue:
             self._dispatch_longs(t)
         if self.short_queue:
@@ -896,6 +976,152 @@ class PecSchedPolicy(BasePolicy):
         for r in self.long_queue:
             if r.prefill_start is None:
                 r.phase = Phase.STARVED
+
+    # ------------------------------------------------------------------
+    # Elastic-fleet hooks (core/fleet.py): vacate a reclaimed replica.
+    # ------------------------------------------------------------------
+    def _requeue_front(self, req):
+        if req.is_long:
+            self.long_queue.appendleft(req)
+        else:
+            self.short_queue.appendleft(req)
+            self.short_queue_tokens += req.input_len
+
+    def on_reclaim(self, t, rep):
+        # pending long claim: release it — the long re-claims survivors
+        if rep.claimed_by is not None:
+            rep.claimed_by = None
+        if rep.long_rid is not None:
+            # member of a long gang (running or paused): cancel the gang and
+            # reform it on the survivors, or restart the long from scratch
+            self._evacuate_long(t, self.longs[rep.long_rid], rep)
+        elif rep.work is not None and not rep.work.canceled:
+            # short prefill / in-place decode: restart from the queue front
+            w = rep.work
+            self.backend.cancel(w)
+            self._release(w, busy=max(t - w.start, 0.0))
+            self._restart_requests(t, w.requests)
+        if rep._decode_load > 0:
+            self._evacuate_decode(t, rep)
+        # colocated shorts riding on this replica's long decode (if any)
+        # complete on the colocation group's survivors; their release path
+        # only touches coloc_tokens, which stays addressable after retire.
+
+    def _evacuate_long(self, t, st: LongState, rep: ReplicaState):
+        """Drop `rep` from its long gang.  Survivors resume from migrated
+        KV (the reclaimed shard's blocks cross the interconnect at cost-
+        model prices); a gang with no survivors restarts the request from
+        the long queue.  Deliberately NOT a scheduler preemption: forced
+        churn is counted in `reclaims`/`restarted_requests`, never in the
+        paper's Table 3/6 suspension counts."""
+        req = st.req
+        if not st.paused:
+            # suspend exactly like _pause_long, minus the preemption count
+            for rid in st.rep_ids:
+                r2 = self.replicas[rid]
+                w = r2.work
+                if w is not None and not w.canceled:
+                    self.backend.cancel(w)
+                    elapsed = max(t - w.start, 0.0)
+                    if w.kind == "long_prefill":
+                        st.remaining = max(w.duration - elapsed, 0.0)
+                    else:
+                        st.decode_remaining = max(w.duration - elapsed, 0.0)
+                    self._release(w, busy=elapsed)
+        rep.long_rid = None
+        rep.long_phase = None
+        survivors = [i for i in st.rep_ids if i != rep.rid]
+        R_old = len(st.rep_ids)
+        if not survivors:
+            self._restart_long(t, st)
+            return
+        if st.phase == "prefill":
+            # progress so far -> tokens whose KV lives on the gang; the
+            # reclaimed replica's 1/R_old shard migrates to the survivors
+            full = self.em.prefill_time(req.input_len, R_old,
+                                        sp_mode=st.sp_mode)
+            frac = 1.0 - min(max(st.remaining / full, 0.0), 1.0) \
+                if full > 0 else 0.0
+            shard = int(frac * req.input_len) // R_old
+            st.remaining = st.remaining * R_old / len(survivors) \
+                + self.em.migration_time(shard)
+        else:
+            # decode phase: the full prompt's KV is live across the gang
+            shard = req.input_len // R_old
+            st.decode_remaining = st.decode_remaining * R_old \
+                / len(survivors) + self.em.migration_time(shard)
+        if shard > 0:
+            self.evacuated_blocks += self._kv_blocks(shard)
+        st.rep_ids = survivors
+        if not st.paused:
+            st.paused = True
+            self._victims.pop(req.rid, None)
+            self._paused[req.rid] = st
+            req.phase = Phase.PAUSED
+        # survivors are free now; the post-reclaim dispatch pass resumes
+        # the reformed gang through the ordinary _resume_paused path
+
+    def _restart_long(self, t, st: LongState):
+        req = st.req
+        self.longs.pop(req.rid, None)
+        self._victims.pop(req.rid, None)
+        self._paused.pop(req.rid, None)
+        for i in st.rep_ids:
+            r = self.replicas[i]
+            if r.long_rid == req.rid:
+                r.long_rid = None
+                r.long_phase = None
+        req.phase = Phase.QUEUED
+        req.prefill_start = None
+        req.first_token = None
+        self.restarted_requests += 1
+        self.long_queue.appendleft(req)
+
+    def _evacuate_decode(self, t, rep: ReplicaState):
+        """Revoke in-flight short-decode batches on a reclaimed pool
+        replica: their KV parks and re-admits on a surviving pool replica
+        (counted in `evacuated_blocks`), and the batches re-queue at the
+        migration queue's front.  Decode works never set `rep.work`, so
+        this walks the pending-event table — reclaims are rare."""
+        pending = [e[1] for e in self.sim._work_entries.values()
+                   if e[1] is not None and not e[2]
+                   and getattr(e[1], "kind", None) == "short_decode"
+                   and rep.rid in e[1].replica_ids]
+        for w in pending:
+            self.backend.cancel(w)
+            rep.decode_load = max(0, rep._decode_load - len(w.requests))
+            rep.add_busy(max(t - w.start, 0.0))
+            for r in reversed(w.requests):
+                self.evacuated_blocks += self._kv_blocks(r.input_len)
+                r.phase = Phase.MIGRATING
+                self.restarted_requests += 1
+                self.decode_queue.appendleft(r)
+        rep.decode_load = 0
+
+    def _decode_stranded_inplace(self, t):
+        """Churn fallback: a reclamation wave killed the LAST active decode
+        replica while migrated shorts sat in `decode_queue` — there is no
+        pool to land on and (unlike the prefill-completion path, which
+        falls back to in-place decode the moment the pool is inactive) no
+        completion event will ever pick them up.  Decode them in place on
+        idle generals, the /Dis colocated semantics.  Unreachable in
+        zero-churn runs: the queue is only non-empty when the pool is
+        saturated, and a saturated replica is never drained enough for the
+        coordinator to flip it away."""
+        dq = self.decode_queue
+        idx = self.index
+        mdc = self.cc.max_decode_concurrency
+        while dq and idx.idle_general:
+            rep = self.replicas[min(idx.idle_general)]
+            batch = [dq.popleft() for _ in range(min(len(dq), mdc))]
+            max_out = max(r.output_len for r in batch)
+            avg_in = sum(r.input_len for r in batch) // len(batch)
+            d = self.em.decode_time(max_out, avg_in, batch=len(batch))
+            for r in batch:
+                if r.first_token is None:
+                    r.first_token = t
+                r.phase = Phase.DECODE
+            self._start(t, "short_decode_inplace", batch, [rep.rid], d)
 
 
 # ===========================================================================
@@ -1272,6 +1498,12 @@ class PecSchedSLOPolicy(PecSchedPolicy):
             return
         super()._dispatch_longs(t)
 
+    def on_reclaim(self, t, rep):
+        super().on_reclaim(t, rep)
+        # restarted work re-entered the backlog and the prefill-capable
+        # replica count changed — the plan must rebuild before it is read
+        self._plan_dirty = True
+
 
 # ===========================================================================
 # Prediction-aware scheduling (beyond-paper: ELIS / Beyond-Prediction).
@@ -1557,6 +1789,63 @@ class PredSJFPolicy(BasePolicy):
             if r.prefill_start is None:
                 r.phase = Phase.STARVED
 
+    # ---- elastic-fleet hooks ------------------------------------------
+    def on_reclaim(self, t, rep):
+        # prefill-side work: restart through the ready heap (re-predicted —
+        # an online predictor may have learned since the first admission)
+        w = rep.work
+        if w is not None and not w.canceled:
+            self.backend.cancel(w)
+            self._release(w, busy=max(t - w.start, 0.0))
+            for r in reversed(w.requests):
+                r.phase = Phase.QUEUED
+                r.prefill_start = None
+                r.first_token = None
+                self.restarted_requests += 1
+                point = self.predict_output(r, None)
+                heapq.heappush(self._ready,
+                               (self._total_cost(r, point), r.rid))
+        # in-flight decode-lane rounds on this replica: evict at the churn
+        # boundary; st[2] += 1 makes the re-admission price the park+restore
+        # migration — the resume-from-migrated-KV arm
+        pending = [e[1] for e in self.sim._work_entries.values()
+                   if e[1] is not None and not e[2]
+                   and getattr(e[1], "kind", None) == "pred_decode"
+                   and rep.rid in e[1].replica_ids]
+        for w in pending:
+            self.backend.cancel(w)
+            req = w.requests[0]
+            rep.decode_load = max(0, rep._decode_load - 1)
+            self._lane_free += 1
+            rep.add_busy(max(t - w.start, 0.0))
+            st = self._dstate[req.rid]
+            st[2] += 1
+            self.evacuated_blocks += self._kv_blocks(req.input_len + st[0])
+            req.phase = Phase.MIGRATING
+            self._push_decode(req)
+        # shrink the construction-time capacity snapshots
+        if rep.role in PREFILL_CAPABLE:
+            self._n_general = max(1, self._n_general - 1)
+        if any(r.rid == rep.rid for r in self._decode_pool):
+            self._lane_free -= self.cc.max_decode_concurrency \
+                - rep._decode_load
+            self._decode_pool = [r for r in self._decode_pool
+                                 if r.rid != rep.rid]
+        rep.decode_load = 0
+        if not self._decode_pool:
+            # last lane replica reclaimed: decode falls back onto whatever
+            # survives rather than stranding the decode-ready heap
+            self._decode_pool = [r for r in self.replicas if r.available]
+            self._lane_free = sum(
+                self.cc.max_decode_concurrency - r._decode_load
+                for r in self._decode_pool)
+
+    def on_join(self, t, rep):
+        self._n_general += 1 if rep.role in PREFILL_CAPABLE else 0
+        if rep.role == "short_decode":
+            self._decode_pool.append(rep)
+            self._lane_free += self.cc.max_decode_concurrency
+
 
 class TailAwarePolicy(PredSJFPolicy):
     """Beyond-Prediction hedging: budget decode lanes against a high
@@ -1586,6 +1875,40 @@ POLICY_NAMES = ("fifo", "fifo_noshort", "reservation", "priority", "pecsched",
 
 
 def make_policy(name: str, cc: ClusterConfig, em: ExecutionModel) -> BasePolicy:
+    """Build a scheduling policy by its canonical name.
+
+    ``name`` is any entry of :data:`POLICY_NAMES` (case-insensitive):
+    the paper's baselines (``fifo``, ``fifo_noshort``, ``reservation``,
+    ``priority``), ``pecsched`` and its single-mechanism ablations
+    (``pecsched/pe`` no preemption, ``/dis`` no disaggregation, ``/col``
+    no colocation, ``/fsp`` no fast-SP), and the extension policies
+    (``/coord``, ``/cache``, ``/cache_greedy``, ``/slo``, ``sjf_pred``,
+    ``tail_aware``).  Predictor-driven policies take an optional
+    ``:<spec>`` suffix naming the output-length predictor —
+    ``oracle``, ``noisy<sigma>``, ``history`` or ``adversarial`` (see
+    ``repro.core.predictor``); the bare names default to ``noisy0.6``.
+    Human-readable descriptions of all of these live in
+    ``docs/POLICIES.md`` (drift-gated against :data:`POLICY_NAMES`).
+
+    The returned policy drives *either* backend — the simulator and the
+    real-engine serving stack share this one decision brain.  Worked
+    example (simulated smoke trace)::
+
+        from repro.configs import get_config
+        from repro.core import (ClusterConfig, ExecutionModel, Simulator,
+                                make_policy)
+        from repro.core.scenarios import get_scenario
+
+        cc = ClusterConfig(n_nodes=1, gpus_per_node=4, tp=1,
+                           n_short_decode_replicas=1)
+        em = ExecutionModel(get_config("mistral_7b"), cc.replica_spec())
+        reqs = get_scenario("smoke_mini", n_requests=42, seed=0)
+        policy = make_policy("sjf_pred:noisy1.2", cc, em)
+        summary = Simulator(policy).run(reqs)
+        print(summary["short_qd_pct"]["99"])   # p99 short queueing delay
+
+    Raises ``ValueError`` on a name outside the registry.
+    """
     name = name.lower()
     if name == "fifo":
         return FIFOPolicy(cc, em)

@@ -7,8 +7,10 @@ times come from the roofline cost model (costmodel.py) — the same formulas
 the dry-run roofline analysis uses, so simulator and compiled-artifact
 analysis share one source of truth.
 
-Event kinds: ARRIVAL(request), DONE(work). Policies expose on_event hooks and
-a dispatch() pass.
+Event kinds: ARRIVAL(request), DONE(work), FLEET(churn: reclamation
+notice/deadline or autoscale join, routed to the attached FleetController —
+core/fleet.py); anything else is backend-internal (engine quanta). Policies
+expose on_event hooks and a dispatch() pass.
 
 The event loop is built for 100 K+-request traces:
 
@@ -178,10 +180,15 @@ class Simulator:
     """
 
     def __init__(self, policy: "BasePolicy", backend=None, *,
-                 elide_dispatch: bool = True):
+                 elide_dispatch: bool = True, fleet=None):
         from repro.core.backend import SimBackend
         self.policy = policy
         self.backend = backend if backend is not None else SimBackend()
+        #: optional FleetController (core/fleet.py): injects replica churn
+        #: (reclamation notices/deadlines, autoscale joins) as FLEET events
+        #: and steps its autoscaler before each dispatch pass.  None — and
+        #: an inert controller — leave the event stream untouched.
+        self.fleet = fleet
         self.heap = EventHeap()
         self._work_entries: Dict[int, Entry] = {}   # wid -> pending entry
         self.now = 0.0
@@ -246,6 +253,11 @@ class Simulator:
             self.last_arrival = requests[-1].arrival if requests else 0.0
         self.backend.bind(self)
         self.policy.bind(self.backend)
+        if self.fleet is not None:
+            self.fleet.bind(self)
+        fleet = self.fleet
+        fleet_event = fleet.on_event if fleet is not None else None
+        fleet_step = fleet.step if fleet is not None else None
         on_arrival, on_done = self.policy.on_arrival, self.policy.on_done
         dispatch = self.policy.dispatch
         needs_dispatch = self.policy.needs_dispatch
@@ -305,6 +317,15 @@ class Simulator:
                         finish(t, payload)
                     on_done(t, payload)
                     n_policy_events += 1
+                elif kind == "FLEET":       # churn: notice/reclaim/join
+                    self._work_entries.pop(payload.wid, None)
+                    if payload.canceled:    # pragma: no cover - defensive
+                        continue
+                    fleet_event(t, payload)
+                    # churn moves policy-visible state (queues refill with
+                    # restarted work, index sets shrink/grow), so the batch
+                    # must NOT be elided as a pure backend quantum
+                    n_policy_events += 1
                 else:                       # backend-internal (engine quantum)
                     self._work_entries.pop(payload.wid, None)
                     if payload.canceled:
@@ -319,6 +340,11 @@ class Simulator:
             elif elide and not needs_dispatch(t):
                 self.n_elided_idle += 1
             else:
+                if fleet_step is not None:
+                    # autoscaler decisions piggyback on dispatch passes:
+                    # fleet pressure only moves on policy-visible events,
+                    # so elided batches cannot hide a scale-up trigger
+                    fleet_step(t)
                 dispatch(t)
                 self.n_dispatches += 1
             self.sched_time += _time.perf_counter() - t0

@@ -95,6 +95,17 @@ CELL_SETUP: Dict[Tuple[str, str], Dict] = {
     ("engine", "slo_tiered"): dict(
         n_requests=64, utilization=1.05,
         overrides=(("mean_cycle", 0.004), ("slo_scale", 0.0005))),
+    # elastic-fleet cells: `churn` runs the default 0.65-utilization mix —
+    # the wave (runner-injected, 20% of the fleet) is the stressor, and the
+    # question is whether the short-QD win survives it.  `churn_scale` runs
+    # far past the post-wave capacity knee (PecSched absorbs the wave until
+    # ~2x calibrated capacity) with the autoscaler allowed to backfill the
+    # whole wave after a provisioning delay, so the recovery claims have a
+    # regime where scale-up visibly bounds the surviving tail.
+    ("sim", "churn_scale"): dict(
+        n_requests=2500, utilization=2.4,
+        overrides=(("fleet_autoscale", True), ("fleet_max_joins", 7),
+                   ("fleet_provision_s", 5.0))),
 }
 
 

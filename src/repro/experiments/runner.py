@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import (ClusterConfig, Simulator, get_scenario, make_policy)
 from repro.core.costmodel import ExecutionModel
+from repro.core.fleet import FleetConfig, FleetController, reclamation_wave
 from repro.core.workload import calibrate_short_capacity, paper_cluster
 from repro.experiments.spec import (PINNED_SCENARIOS, SCHEMA_VERSION,
                                     ExperimentSpec)
@@ -93,7 +94,10 @@ def engine_stack(model: str, clock: str):
 # workload + execution for one spec
 # ---------------------------------------------------------------------------
 def build_requests(spec: ExperimentSpec, cc, em) -> List:
-    overrides = dict(spec.overrides)
+    # fleet_* keys configure the churn layer (fleet_controller below), not
+    # the trace builder
+    overrides = {k: v for k, v in spec.overrides
+                 if not k.startswith("fleet_")}
     if spec.scenario not in PINNED_SCENARIOS and "arrival_rps" not in overrides:
         if spec.backend == "sim":
             cap = short_capacity(spec.model)
@@ -102,6 +106,36 @@ def build_requests(spec: ExperimentSpec, cc, em) -> List:
         overrides["arrival_rps"] = cap * spec.utilization
     return get_scenario(spec.scenario, n_requests=spec.n_requests,
                         seed=spec.seed, **overrides)
+
+
+def fleet_controller(spec: ExperimentSpec, cc,
+                     reqs: List) -> Optional[FleetController]:
+    """Churn layer for one spec: the `churn` scenario gets a default 20%
+    reclamation wave at the trace's first arrival quartile; `fleet_*`
+    overrides (prefix stripped) pin or extend any `FleetConfig` field and
+    activate the layer on any scenario.  Everything is a deterministic
+    function of the spec + built trace, so cached results stay valid."""
+    fo = {k[len("fleet_"):]: v for k, v in spec.overrides
+          if k.startswith("fleet_")}
+    if spec.scenario != "churn" and not fo:
+        return None
+    arrivals = sorted(r.arrival for r in reqs)
+    span = arrivals[-1] - arrivals[0] if arrivals else 0.0
+    wave_at = fo.pop("wave_at", None)
+    if wave_at is None:
+        wave_at = (arrivals[0] + 0.25 * span) if arrivals else 0.0
+    wave_frac = fo.pop("wave_frac", 0.20)
+    reclamations = fo.pop("reclamations", None)
+    if reclamations is None:
+        reclamations = reclamation_wave(float(wave_at), float(wave_frac),
+                                        cc.n_replicas)
+    else:
+        reclamations = tuple((float(t), int(rid)) for t, rid in reclamations)
+    # default notice window: 1% of the trace span — a real grace period on
+    # both the seconds-scale sim timeline and the ms-scale engine timeline
+    notice_s = float(fo.pop("notice_s", 0.01 * span))
+    return FleetController(FleetConfig(reclamations=reclamations,
+                                       notice_s=notice_s, **fo))
 
 
 def run_spec(spec: ExperimentSpec) -> Dict:
@@ -114,7 +148,9 @@ def run_spec(spec: ExperimentSpec) -> Dict:
         backend.reset()
     reqs = build_requests(spec, cc, em)
     policy = make_policy(spec.policy, cc, em)
-    sim = Simulator(policy) if backend is None else Simulator(policy, backend=backend)
+    fleet = fleet_controller(spec, cc, reqs)
+    sim = Simulator(policy, fleet=fleet) if backend is None \
+        else Simulator(policy, backend=backend, fleet=fleet)
     t0 = time.perf_counter()
     summary = sim.run(reqs)
     summary["wall_s"] = time.perf_counter() - t0

@@ -6,6 +6,26 @@ Specs are frozen, hashable, picklable (process-parallel sweeps) and have a
 stable content hash (`spec_hash`) that keys the on-disk result cache: the
 same spec always maps to the same cache file, and any change to the grid
 schema bumps `SCHEMA_VERSION` to invalidate stale results wholesale.
+
+Worked example — one cell, run and cached; then the 15-policy sweep over
+two scenarios that `by_policy` regroups for the claims registry::
+
+    from repro.experiments.spec import ExperimentSpec, grid
+    from repro.experiments.runner import run_spec, run_sweep, by_policy
+
+    cell = ExperimentSpec(policy="pecsched", scenario="bursty",
+                          n_requests=2000, seed=1)
+    summary = run_spec(cell)              # one metrics.summarize dict
+    summary["short_qd_pct"]["99"]
+
+    specs = grid(["fifo", "pecsched", "pecsched/coord"],
+                 scenarios=("azure_default", "churn"), seeds=(0, 1))
+    cells = by_policy(run_sweep(specs, cache_dir="results/cache"))
+    cells[("sim", "mistral_7b", "churn", 0)]["pecsched"]["reclaims"]
+
+Overrides are (key, value) tuples so the spec stays frozen/hashable;
+keys prefixed ``fleet_`` configure the churn layer (core/fleet.py) and
+are stripped before the rest flow into `get_scenario`.
 """
 from __future__ import annotations
 
@@ -16,7 +36,11 @@ from typing import Dict, List, Sequence, Tuple
 
 #: bump when summary structure or workload construction changes meaning —
 #: every cached result keyed under the old version stops matching
-SCHEMA_VERSION = 5        # 5: TTFT/TPOT/goodput/slo_tiers/busy_overflow_s
+SCHEMA_VERSION = 6        # 6: elastic-fleet churn — reclaims/
+#                              evacuated_blocks/restarted_requests in
+#                              metrics.summarize, fleet_* overrides change
+#                              workload construction (FleetController)
+#                           5: TTFT/TPOT/goodput/slo_tiers/busy_overflow_s
 #                              in metrics.summarize + unified first-token
 #                              stamping (migrating shorts stamp at decode
 #                              start, not prefill completion)

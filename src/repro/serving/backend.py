@@ -427,6 +427,12 @@ class EngineBackend(ExecutionBackend):
             remaining: Dict[int, int] = {}
             while pending and eng.free_slots():
                 r = pending.popleft()
+                if r.rid not in self._kv:
+                    # already decoded: the first dispatch of this request
+                    # executed eagerly before churn canceled its Work and
+                    # the policy restarted it — generations are complete
+                    self.stats["churn_redecode_skips"] += 1
+                    continue
                 try:
                     slot = eng.admit(r.rid, self._kv[r.rid])
                 except SlotsFull:           # lost a race with a long's slot
@@ -438,6 +444,8 @@ class EngineBackend(ExecutionBackend):
                 toks[slot] = self.generated[r.rid][-1]
                 remaining[slot] = self._target_new(r) - 1
             if not admitted:
+                if not pending:             # everything was a churn skip
+                    break
                 raise SlotsFull(
                     "decode pool wedged: no slot frees up for "
                     f"{len(pending)} pending requests")
@@ -487,11 +495,16 @@ class EngineBackend(ExecutionBackend):
             slot = eng.admit(rid, self._kv[rid])
             del self._kv[rid]
             self.stats["kv_migrations"] += 1
-        else:
+        elif rid in self._parked_decode:
             k, v = self._parked_decode.pop(rid)
             eng.scatter_kv(rid, jnp.asarray(k), jnp.asarray(v))
             slot = eng.bind_slot(rid)
             self.stats["decode_readmits"] += 1
+        else:
+            # the final round already ran before churn canceled its Work
+            # and re-queued the request — nothing left to decode
+            self.stats["churn_redecode_skips"] += 1
+            return 0.0
         dt = 0.0
         last = self.generated[rid][-1]
         for _ in range(max(goal - len(self.generated[rid]), 0)):
@@ -540,10 +553,13 @@ class EngineBackend(ExecutionBackend):
             home = self._resident[req.rid]
             slot = self._engine(home).bind_slot(req.rid)
             del self._resident[req.rid]
+        # remaining counts from what is already generated (1 token after a
+        # normal prefill; more after a churn evacuation re-bind mid-decode)
         self._dsessions[req.rid] = {
             "slot": slot, "home": home,
             "last": self.generated[req.rid][-1],
-            "remaining": self._target_new(req) - 1}
+            "remaining": max(
+                self._target_new(req) - len(self.generated[req.rid]), 0)}
 
     # ---- eager kinds --------------------------------------------------
     def _execute(self, work: Work) -> float:
@@ -627,6 +643,46 @@ class EngineBackend(ExecutionBackend):
                     f"{rid}: live decode slots {live}, resident gang KV "
                     f"{resident}")
         self.stats["role_flips"] += 1
+
+    def reclaim_replica(self, t: float, rid: int) -> Dict[str, int]:
+        """Spot eviction of replica `rid`: park every piece of KV physically
+        resident on its engine so migrated requests resume elsewhere, then
+        clear the engine (blocks, slots, prefix cache — the physical twin
+        of `PrefixResidency.drop_replica`).
+
+        Evacuation is the gang-scatter park recipe: gather the request's
+        paged KV, copy it host-side into `_parked_scatter`, and let the
+        next `_bind_long_decode` scatter it into whichever surviving
+        replica the policy re-dispatches on (`scatter_kv` + `bind_slot`).
+        In-flight prefill sessions (`_psessions`/`_gangs`) hold
+        engine-agnostic device arrays, not pool blocks, and parked
+        prefills (`_kv`) are already host-portable — both migrate for free
+        at their next use, so only pool-resident state needs parking."""
+        eng = self._engines.get(rid)
+        if eng is None:
+            return {}
+        parked = blocks = 0
+        # live long-decode sessions homed here: park mid-generation
+        for req_rid in [r for r, s in self._dsessions.items()
+                        if s["home"] == rid]:
+            blocks += len(eng.kvpool.tables.get(req_rid, ()))
+            k, v = eng.kvpool.gather(req_rid)
+            self._parked_scatter[req_rid] = (np.asarray(k), np.asarray(v))
+            del self._dsessions[req_rid]
+            parked += 1
+        # gang-scattered KV awaiting its decode bind
+        for req_rid in [r for r, home in self._resident.items()
+                        if home == rid]:
+            blocks += len(eng.kvpool.tables.get(req_rid, ()))
+            k, v = eng.kvpool.gather(req_rid)
+            self._parked_scatter[req_rid] = (np.asarray(k), np.asarray(v))
+            del self._resident[req_rid]
+            parked += 1
+        eng.clear()
+        self.stats["reclaims"] += 1
+        self.stats["evacuated_sessions"] += parked
+        self.stats["evacuated_blocks"] += blocks
+        return {"parked_sessions": parked, "evacuated_blocks": blocks}
 
     def cancel(self, work: Work) -> bool:
         ok = self.sim.cancel(work)

@@ -1,0 +1,121 @@
+"""Doc-drift gate: the human-readable catalogs must match the code.
+
+`docs/POLICIES.md` is the canonical policy/scenario catalog; its tables
+are delimited by `<!-- policy-catalog:begin/end -->` markers so this gate
+can compare them *exactly* (both directions) against
+`repro.core.schedulers.POLICY_NAMES` and `repro.core.scenarios.SCENARIOS`.
+The README keeps only counts and `--policy/--scenario` mentions — those
+are checked too. The EXPERIMENTS.md claims-ledger table must carry one
+row per registered claim.
+
+The gate runs in the CI lint job (and tier-1); `test_gate_canary_*`
+prove it actually fails on a seeded mismatch.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.core import POLICY_NAMES
+from repro.core.scenarios import SCENARIOS
+from repro.experiments.claims import CLAIMS
+
+ROOT = Path(__file__).parent.parent
+POLICIES_MD = (ROOT / "docs" / "POLICIES.md").read_text()
+ARCH_MD = (ROOT / "docs" / "ARCHITECTURE.md").read_text()
+README_MD = (ROOT / "README.md").read_text()
+EXPERIMENTS_MD = (ROOT / "EXPERIMENTS.md").read_text()
+
+
+# ---------------- helpers (reused by the canaries) ---------------------------
+def catalog_names(text: str, marker: str):
+    """First-column backticked names of the marker-delimited table;
+    `name:<spec>` syntax collapses to its base name."""
+    m = re.search(rf"<!-- {marker}:begin -->\n(.*?)<!-- {marker}:end -->",
+                  text, re.S)
+    assert m, f"docs are missing the {marker} markers"
+    names = []
+    for ln in m.group(1).splitlines():
+        cell = re.match(r"\| `([^`]+)`", ln)
+        if cell:
+            names.append(cell.group(1).partition(":")[0])
+    return names
+
+
+def assert_catalog_matches(documented, registry, what: str):
+    doc, reg = set(documented), set(registry)
+    assert doc == reg, (
+        f"{what} catalog drift: documented-but-unregistered "
+        f"{sorted(doc - reg)}, registered-but-undocumented "
+        f"{sorted(reg - doc)}")
+    assert len(documented) == len(set(documented)), f"duplicate {what} rows"
+
+
+def ledger_rows(text: str):
+    """Backticked claim ids of the §Claims ledger table."""
+    m = re.search(r"## Claims ledger\n(.*?)\n## ", text, re.S)
+    assert m, "EXPERIMENTS.md is missing the §Claims ledger section"
+    return re.findall(r"^\| `([^`]+)` \|", m.group(1), re.M)
+
+
+# ---------------- the gate ---------------------------------------------------
+def test_policy_catalog_matches_registry():
+    assert_catalog_matches(catalog_names(POLICIES_MD, "policy-catalog"),
+                           POLICY_NAMES, "policy")
+
+
+def test_scenario_catalog_matches_registry():
+    assert_catalog_matches(catalog_names(POLICIES_MD, "scenario-catalog"),
+                           SCENARIOS, "scenario")
+
+
+def test_readme_counts_match_registries():
+    """The README quotes catalog sizes; they must track the registries."""
+    n_pol = re.search(r"(\d+) policy names", README_MD)
+    n_sc = re.search(r"(\d+) named scenarios", README_MD)
+    assert n_pol and int(n_pol.group(1)) == len(POLICY_NAMES)
+    assert n_sc and int(n_sc.group(1)) == len(SCENARIOS)
+
+
+@pytest.mark.parametrize("md,src", [(README_MD, "README.md"),
+                                    (POLICIES_MD, "docs/POLICIES.md"),
+                                    (ARCH_MD, "docs/ARCHITECTURE.md")])
+def test_cli_mentions_are_real(md, src):
+    """Every `--scenario X` / `--policy X` the docs tell users to type
+    must resolve against the registries (`--policy all` is the sweep)."""
+    for name in re.findall(r"--scenario[= ]([\w./:-]+)", md):
+        assert name in SCENARIOS, (src, name)
+    for name in re.findall(r"--policy[= ]([\w./:-]+)", md):
+        base = name.partition(":")[0]
+        assert base == "all" or base in POLICY_NAMES, (src, name)
+
+
+def test_claims_ledger_row_per_claim():
+    """One ledger row per registered claim — ids match exactly, so a new
+    claim (or a renamed one) fails until EXPERIMENTS.md is regenerated."""
+    rows = ledger_rows(EXPERIMENTS_MD)
+    assert_catalog_matches(rows, CLAIMS.keys(), "claims-ledger")
+
+
+# ---------------- canaries: the gate actually bites --------------------------
+def test_gate_canary_unregistered_policy():
+    doctored = POLICIES_MD.replace(
+        "| `fifo` |", "| `totally_new_policy` |\n| `fifo` |", 1)
+    with pytest.raises(AssertionError, match="totally_new_policy"):
+        assert_catalog_matches(catalog_names(doctored, "policy-catalog"),
+                               POLICY_NAMES, "policy")
+
+
+def test_gate_canary_undocumented_scenario():
+    doctored = re.sub(r"\| `churn` \|[^\n]*\n", "", POLICIES_MD, count=1)
+    with pytest.raises(AssertionError, match="'churn'"):
+        assert_catalog_matches(catalog_names(doctored, "scenario-catalog"),
+                               SCENARIOS, "scenario")
+
+
+def test_gate_canary_missing_ledger_row():
+    doctored = re.sub(r"^\| `fig2_hol_delay` \|[^\n]*\n", "",
+                      EXPERIMENTS_MD, count=1, flags=re.M)
+    with pytest.raises(AssertionError, match="fig2_hol_delay"):
+        assert_catalog_matches(ledger_rows(doctored), CLAIMS.keys(),
+                               "claims-ledger")

@@ -1,0 +1,296 @@
+"""Elastic-fleet churn tests (core/fleet.py).
+
+* Zero-churn determinism: an inert FleetController must be invisible — the
+  decision log of every policy is bit-identical to a run with no controller.
+* Gang-SP reclaim: reclaiming a member of an in-flight long gang mid-prefill
+  reforms the gang on the survivors (KV migrates at cost-model prices) and
+  the long still completes; reclaiming a replica outside the gang is free.
+* Last-decode-replica reclaim: killing the only short_decode replica strands
+  nobody — migrated shorts fall back to in-place decode on generals.
+* Autoscale: under post-wave backlog pressure the controller joins fresh
+  replicas (dense rids, live placement sets) and they actually serve work.
+* Engine world: `EngineBackend.reclaim_replica` parks real KV off the dying
+  replica and the run still completes every request.
+"""
+import copy
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core import (POLICY_NAMES, ClusterConfig, ExecutionModel, Phase,
+                        Simulator, make_policy, paper_cluster)
+from repro.core.fleet import FleetConfig, FleetController, reclamation_wave
+from repro.core.request import Request
+
+ALL_POLICIES = list(POLICY_NAMES)
+
+
+@pytest.fixture(scope="module")
+def small_cluster():
+    """The canonical engine-test topology, driven analytically: 2 general +
+    1 dedicated-decode replica, prefill target tight enough that a 300K
+    long needs an SP gang."""
+    cc = ClusterConfig(n_nodes=1, gpus_per_node=3, tp=1,
+                       n_short_decode_replicas=1, max_decode_concurrency=8)
+    em = ExecutionModel(get_config("mistral_7b"), cc.replica_spec(),
+                        target_prefill_s=0.5)
+    return cc, em
+
+
+def mini_trace():
+    """Two longs under sustained short pressure (the test_backends trace):
+    forces HOL blocking, SP gangs, migration, and preemption."""
+    rng = np.random.default_rng(0)
+    reqs, t = [], 0.0
+    for i in range(14):
+        is_long = i in (0, 7)
+        t += 0.002 if i else 0.0
+        reqs.append(Request(
+            rid=i, arrival=round(t, 6),
+            input_len=300_000 if is_long else int(rng.integers(300, 3000)),
+            output_len=60 if is_long else int(rng.integers(10, 60)),
+            is_long=is_long))
+    return reqs
+
+
+def gang_trace():
+    """One 300K long at t=0 plus a stream of shorts on the paper cluster:
+    the long's SP gang prefills for ~15 s, a wide-open churn window."""
+    rng = np.random.default_rng(3)
+    reqs, t = [], 0.0
+    for i in range(40):
+        is_long = i == 0
+        reqs.append(Request(
+            rid=i, arrival=round(t, 6),
+            input_len=300_000 if is_long else int(rng.integers(300, 3000)),
+            output_len=60 if is_long else int(rng.integers(10, 60)),
+            is_long=is_long))
+        t += 0.05
+    return reqs
+
+
+# ---------------- zero-churn determinism -------------------------------------
+@pytest.mark.parametrize("pol", ALL_POLICIES)
+def test_zero_churn_parity(small_cluster, pol):
+    """A FleetController with nothing to do must be bit-invisible: identical
+    decision logs with and without it, for every policy."""
+    cc, em = small_cluster
+
+    p_plain = make_policy(pol, cc, em)
+    p_plain.record_decisions = True
+    s_plain = Simulator(p_plain).run(copy.deepcopy(mini_trace()))
+
+    p_fleet = make_policy(pol, cc, em)
+    p_fleet.record_decisions = True
+    ctrl = FleetController(FleetConfig())        # no reclamations, no scaling
+    s_fleet = Simulator(p_fleet, fleet=ctrl).run(copy.deepcopy(mini_trace()))
+
+    assert p_plain.decision_log == p_fleet.decision_log
+    assert s_plain["preemptions"] == s_fleet["preemptions"]
+    assert s_plain["reclaims"] == s_fleet["reclaims"] == 0
+    assert ctrl.events == []
+
+
+def test_inert_controller_state(small_cluster):
+    """An autoscale config without joins (max_joins=0) is inert too, and an
+    unbound controller carries no events."""
+    cc, em = small_cluster
+    ctrl = FleetController(FleetConfig(autoscale=True, max_joins=0))
+    p = make_policy("pecsched", cc, em)
+    Simulator(p, fleet=ctrl).run(copy.deepcopy(mini_trace()))
+    assert ctrl._inert and ctrl.events == []
+
+
+def test_reclamation_wave_shape():
+    assert reclamation_wave(5.0, 0.20, 32) == tuple(
+        (5.0, rid) for rid in range(7))
+    assert reclamation_wave(1.0, 0.0, 8) == ()
+    assert reclamation_wave(1.0, 1.5, 4) == tuple((1.0, r) for r in range(4))
+
+
+# ---------------- gang-SP reclaim --------------------------------------------
+def test_reclaim_mid_gang_prefill():
+    """Reclaiming a gang member 5 s into a ~15 s SP prefill: the gang
+    reforms on the survivors, the shard's KV migration is priced in (first
+    token slips, `evacuated_blocks` counts the shard), nothing restarts."""
+    cc, em = paper_cluster("mistral_7b")
+
+    p0 = make_policy("pecsched", cc, em)
+    s0 = Simulator(p0).run(copy.deepcopy(gang_trace()))
+    ft0 = next(r for r in p0.all_requests if r.is_long).first_token
+    assert ft0 > 10.0                    # the gang really is mid-prefill at 5s
+
+    p = make_policy("pecsched", cc, em)
+    ctrl = FleetController(FleetConfig(reclamations=((5.0, 0),), notice_s=0.5))
+    s = Simulator(p, fleet=ctrl).run(copy.deepcopy(gang_trace()))
+    lg = next(r for r in p.all_requests if r.is_long)
+
+    assert ctrl.events == [(5.0, "notice", 0), (5.5, "reclaim", 0)]
+    assert s["long_completed"] == 1 and s["short_completed"] == s["n_short"]
+    assert s["evacuated_blocks"] > 0             # the 1/R shard migrated
+    assert s["restarted_requests"] == 0          # resumed, not restarted
+    assert lg.first_token > ft0                  # migration cost is real
+    assert p.replicas[0].retired
+    assert p.replicas[0].retired_at == pytest.approx(5.5)
+
+
+def test_reclaim_outside_gang_is_free():
+    """Reclaiming a replica the gang never touched (the decode tail) leaves
+    the long's timeline bit-identical to the no-churn run."""
+    cc, em = paper_cluster("mistral_7b")
+
+    p0 = make_policy("pecsched", cc, em)
+    Simulator(p0).run(copy.deepcopy(gang_trace()))
+    ft0 = next(r for r in p0.all_requests if r.is_long).first_token
+
+    p = make_policy("pecsched", cc, em)
+    ctrl = FleetController(FleetConfig(
+        reclamations=((5.0, cc.n_replicas - 1),), notice_s=0.5))
+    s = Simulator(p, fleet=ctrl).run(copy.deepcopy(gang_trace()))
+    lg = next(r for r in p.all_requests if r.is_long)
+    assert lg.first_token == ft0
+    assert s["long_completed"] == 1 and s["short_completed"] == s["n_short"]
+
+
+# ---------------- last-decode-replica reclaim --------------------------------
+@pytest.mark.parametrize("pol", ["pecsched", "pecsched/coord", "pecsched/slo",
+                                 "sjf_pred", "tail_aware"])
+def test_reclaim_last_decode_replica(small_cluster, pol):
+    """Killing the ONLY decode-pool replica mid-run must not strand the
+    shorts that migrated to it: they re-land in place on the generals
+    (PecSched's stranded-migrant fallback / the pred policies' pool
+    rebuild) and every request completes."""
+    cc, em = small_cluster
+    p = make_policy(pol, cc, em)
+    dec_rid = next(r.rid for r in p.replicas if r.role == "short_decode")
+    ctrl = FleetController(FleetConfig(reclamations=((0.3, dec_rid),),
+                                       notice_s=0.05))
+    s = Simulator(p, fleet=ctrl).run(copy.deepcopy(mini_trace()))
+    assert s["short_completed"] == s["n_short"], pol
+    assert s["long_completed"] == s["n_long"], pol
+    assert s["reclaims"] == 1
+    for r in p.all_requests:
+        assert r.phase == Phase.DONE, (pol, r.rid, r.phase)
+
+
+def test_reclaim_decode_replica_evacuates_kv(small_cluster):
+    """At t=0.3 the pool replica holds in-flight decode batches: their KV
+    blocks are counted as evacuated and the batches re-decode elsewhere."""
+    cc, em = small_cluster
+    p = make_policy("pecsched", cc, em)
+    ctrl = FleetController(FleetConfig(reclamations=((0.3, 2),),
+                                       notice_s=0.05))
+    s = Simulator(p, fleet=ctrl).run(copy.deepcopy(mini_trace()))
+    assert s["short_completed"] == s["n_short"]
+    assert s["evacuated_blocks"] > 0
+
+
+# ---------------- autoscale --------------------------------------------------
+def test_autoscale_joins_fire_and_serve():
+    """A wave plus overload: the pressure-driven autoscaler backfills the
+    reclaimed capacity — joins fire, joined replicas take placements, and
+    the joined rids extend the dense range."""
+    cc, em = paper_cluster("mistral_7b")
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=i, arrival=round(i * 0.004, 6),
+                    input_len=int(rng.integers(2000, 8000)),
+                    output_len=int(rng.integers(10, 60)), is_long=False)
+            for i in range(800)]
+
+    p = make_policy("pecsched", cc, em)
+    ctrl = FleetController(FleetConfig(
+        reclamations=reclamation_wave(0.2, 0.20, cc.n_replicas),
+        notice_s=0.05, autoscale=True, max_joins=3, provision_s=0.5))
+    s = Simulator(p, fleet=ctrl).run(copy.deepcopy(reqs))
+
+    assert s["reclaims"] == 7
+    assert s["joins"] >= 1
+    assert len(p.replicas) == cc.n_replicas + s["joins"]
+    assert s["short_completed"] == s["n_short"]
+    joined = p.replicas[cc.n_replicas:]
+    assert all(r.joined_at > 0 for r in joined)
+    assert any(r.busy_time > 0 for r in joined)   # they actually served
+    # join events land after their provisioning delay
+    join_ts = [t for t, a, _ in ctrl.events if a == "join"]
+    assert len(join_ts) == s["joins"]
+
+
+def test_autoscaler_silent_without_pressure():
+    """The same autoscale config under a trickle of work never scales."""
+    cc, em = paper_cluster("mistral_7b")
+    reqs = [Request(rid=i, arrival=round(i * 1.0, 6), input_len=1000,
+                    output_len=10, is_long=False) for i in range(20)]
+    p = make_policy("pecsched", cc, em)
+    ctrl = FleetController(FleetConfig(autoscale=True, max_joins=3))
+    s = Simulator(p, fleet=ctrl).run(copy.deepcopy(reqs))
+    assert s["joins"] == 0 and len(p.replicas) == cc.n_replicas
+
+
+def test_fifo_has_no_pressure_signal():
+    """Policies without an incremental short-backlog counter (FIFO) simply
+    do not autoscale — the controller declines to build a coordinator."""
+    cc, em = paper_cluster("mistral_7b")
+    p = make_policy("fifo", cc, em)
+    ctrl = FleetController(FleetConfig(autoscale=True, max_joins=3))
+    Simulator(p, fleet=ctrl).run(copy.deepcopy(gang_trace()))
+    assert ctrl._coord is None
+
+
+# ---------------- accounting invariants --------------------------------------
+def test_lifespan_weighted_idle_rate(small_cluster):
+    """A replica retired at t keeps only [join, retire) in the idle/busy
+    denominator — the summary's gpu_idle_rate stays within [0, 1] and the
+    retired replica's lifespan is capped at its retire time."""
+    cc, em = small_cluster
+    p = make_policy("pecsched", cc, em)
+    ctrl = FleetController(FleetConfig(reclamations=((0.3, 2),),
+                                       notice_s=0.05))
+    s = Simulator(p, fleet=ctrl).run(copy.deepcopy(mini_trace()))
+    assert 0.0 <= s["gpu_idle_rate"] <= 1.0
+    rep = p.replicas[2]
+    assert rep.retired_at == pytest.approx(0.35)    # notice 0.3 + grace 0.05
+    assert rep.lifespan(100.0) == pytest.approx(0.35)
+    assert rep.lifespan(0.1) == pytest.approx(0.1)
+
+
+def test_churn_counters_in_summary(small_cluster):
+    """The four churn counters always surface in metrics.summarize."""
+    cc, em = small_cluster
+    p = make_policy("fifo", cc, em)
+    s = Simulator(p).run(copy.deepcopy(mini_trace()))
+    for k in ("reclaims", "evacuated_blocks", "restarted_requests", "joins"):
+        assert s[k] == 0
+
+
+# ---------------- engine world -----------------------------------------------
+def test_engine_reclaim_parks_and_completes():
+    """The physical twin: reclaiming a general replica on the real engine
+    backend parks its resident KV host-side and the run still completes
+    every request (re-decode for sessions whose engine state died)."""
+    jax = pytest.importorskip("jax")
+    from repro.models import init_params
+    from repro.serving.backend import EngineBackend
+
+    cfg = dataclasses.replace(
+        reduced_config(get_config("mistral_7b"), layers=2),
+        dtype="float32", sliding_window=0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cc = ClusterConfig(n_nodes=1, gpus_per_node=3, tp=1,
+                       n_short_decode_replicas=1, max_decode_concurrency=8)
+    em = ExecutionModel(cfg, cc.replica_spec(), target_prefill_s=0.5)
+    backend = EngineBackend(cfg, params, max_len=128, layers_per_quantum=1,
+                            clock="analytic")
+
+    p = make_policy("pecsched", cc, em)
+    ctrl = FleetController(FleetConfig(reclamations=((0.3, 0),),
+                                       notice_s=0.05))
+    s = Simulator(p, backend=backend, fleet=ctrl).run(
+        copy.deepcopy(mini_trace()))
+    assert s["short_completed"] == s["n_short"]
+    assert s["long_completed"] == s["n_long"]
+    assert backend.stats["reclaims"] == 1
+    # every completed request generated real tokens
+    for r in p.done_requests:
+        assert len(backend.generated.get(r.rid, [])) >= 1
